@@ -1,0 +1,37 @@
+"""Paper Fig. 1 story: per-stage peak memory under 1F1B vs BPipe, and the
+A100-80G fit decisions behind every Table 3 row.
+
+Columns: model, attention, b, schedule, stage memories (GiB), fits.
+"""
+from __future__ import annotations
+
+from repro.core import memory_model as MM
+from repro.core.notation import A100_HBM_BYTES, GPT3_96B, LLAMA_65B
+
+CASES = [
+    ("gpt3-96b", GPT3_96B, "recompute", (1, 2)),
+    ("llama-65b", LLAMA_65B, "none", (1,)),
+    ("llama-65b", LLAMA_65B, "recompute", (2, 4)),
+    ("llama-65b", LLAMA_65B, "flash", (1, 2, 4)),
+]
+
+
+def main(print_csv=True):
+    rows = []
+    for name, n, att, bs in CASES:
+        for b in bs:
+            for kind in ("1f1b", "bpipe"):
+                mems = MM.per_stage_memory(n.replace(b=b), att, kind)
+                total = [m.total / 2**30 for m in mems]
+                fits = MM.fits(n.replace(b=b), att, kind, A100_HBM_BYTES)
+                rows.append((name, att, b, kind, total, fits))
+                if print_csv:
+                    stages = "/".join(f"{t:.0f}" for t in total)
+                    print(f"memory_balance,{name},{att},b={b},{kind},"
+                          f"stages_GiB={stages},max={max(total):.1f},"
+                          f"fits_a100={int(fits)}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Aggregate the dry-run artifacts into the EXPERIMENTS.md roofline table.
+
+Reads experiments/dryrun/*.json. Columns per (arch, shape):
+  compute/memory/collective terms (s), dominant, model_flops/HLO_flops,
+  roofline MFU bound.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DRYRUN = os.path.join(ROOT, "experiments", "dryrun")
+
+
+def load(mesh="single"):
+    out = {}
+    for path in sorted(glob.glob(os.path.join(DRYRUN, f"*__{mesh}.json"))):
+        rec = json.load(open(path))
+        out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+def load_variants():
+    out = {}
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*__single__*.json"))):
+        rec = json.load(open(path))
+        if "shape" not in rec:  # pipeline__* records have their own format
+            continue
+        out[(rec["arch"], rec["shape"], rec.get("variant", "?"))] = rec
+    return out
+
+
+def _emit(tag, key, rec, rows, print_csv):
+    r = rec.get("roofline")
+    if not r:
+        return
+    t = r["terms"]
+    uf = r.get("useful_fraction")
+    rows.append((tag,) + key + (
+        t["t_compute"], t["t_memory"], t["t_collective"], t["dominant"], uf))
+    if print_csv:
+        label = ",".join(key)
+        if uf is not None:
+            print(f"{tag},{label},t_comp={t['t_compute']:.4g},"
+                  f"t_mem={t['t_memory']:.4g},t_coll={t['t_collective']:.4g},"
+                  f"dom={t['dominant']},useful={uf:.3f},"
+                  f"mfu_bound={r['roofline_mfu']:.3f}")
+        else:
+            print(f"{tag},{label},incomplete")
+
+
+def main(print_csv=True, mesh="single"):
+    rows = []
+    for (arch, shape), rec in load(mesh).items():
+        _emit("roofline", (arch, shape), rec, rows, print_csv)
+    # §Perf variants, for before/after comparison against the baselines
+    for (arch, shape, variant), rec in load_variants().items():
+        _emit("roofline_variant", (arch, shape, variant), rec, rows,
+              print_csv)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

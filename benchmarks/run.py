@@ -1,0 +1,36 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,...`` CSV rows:
+  table3             paper Table 3 (MFU, all 10 experiments, +TPU variant)
+  table5             paper §4 estimation validation (eq. 4 pairs)
+  memory_balance     paper Fig. 1 / A100 fit analysis (1F1B vs BPipe)
+  estimator_accuracy eq.4 vs discrete-event simulator across a grid
+  kernel_bench       Pallas kernels + §3.2 fusion-count analysis
+  roofline           per-(arch x shape) roofline terms from the dry-run
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (estimator_accuracy, kernel_bench, memory_balance,
+                            roofline_table, table3, table5)
+    ok = True
+    for mod in (table3, table5, memory_balance, estimator_accuracy,
+                kernel_bench, roofline_table):
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001
+            ok = False
+            print(f"BENCH_FAIL,{mod.__name__}", file=sys.stderr)
+            traceback.print_exc()
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

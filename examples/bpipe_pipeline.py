@@ -1,0 +1,66 @@
+"""BPipe in action: train a model under GPipe / 1F1B / BPipe pipeline
+schedules and print the per-stage activation-stash timeline — the paper's
+Fig. 1, live.
+
+    PYTHONPATH=src python examples/bpipe_pipeline.py [--stages 4]
+
+All three schedules produce bit-comparable losses (same math, different
+memory); the printed peaks show 1F1B's p-x imbalance and BPipe's
+ceil((p+2)/2) cap.
+"""
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.configs.base import TrainConfig  # noqa: E402
+from repro.core import schedule as S  # noqa: E402
+from repro.data.pipeline import DataConfig, make_batch  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.optim import adam  # noqa: E402
+from repro.pipeline import PipelineExecutor  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stages", type=int, default=4)
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=5)
+    args = ap.parse_args()
+    p = args.stages
+
+    cfg = dataclasses.replace(get_config("qwen1.5-0.5b").reduced(),
+                              num_layers=2 * p, dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    dc = DataConfig(batch=8, seq_len=32)
+    tcfg = TrainConfig(global_batch=8, steps=args.steps, warmup_steps=1,
+                       learning_rate=1e-3)
+
+    print(f"pipeline: p={p}, m={8 // args.micro} microbatches, "
+          f"BPipe cap = ceil((p+2)/2) = {S.bpipe_cap(p)}")
+    for kind in ("gpipe", "1f1b", "bpipe"):
+        ex = PipelineExecutor(cfg, p=p, kind=kind, micro_batch=args.micro)
+        params_k, opt = params, adam.init(params)
+        losses = []
+        stats = None
+        for i in range(args.steps):
+            batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, dc, i).items()}
+            res = ex.step(params_k, batch)
+            params_k, opt, _ = adam.update(params_k, res.grads, opt, tcfg)
+            losses.append(float(res.loss))
+            stats = res.stats
+        peaks = [stats.peak_local[i] for i in range(p)]
+        print(f"{kind:>6}: losses {['%.3f' % l for l in losses]}")
+        print(f"        peak stash/stage {peaks}  "
+              f"evictions={stats.evictions} loads={stats.loads} "
+              f"moved={stats.bytes_moved/2**20:.1f}MiB(modelled)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""The paper's §4 workflow, end to end: decide whether BPipe is worth
+implementing for YOUR model, *before* building it — using only a cheap
+single-stage measurement.
+
+    PYTHONPATH=src python examples/estimate_before_deploy.py \
+        --arch qwen1.5-32b --p 8 --t 4 --B 128
+
+Steps (exactly the paper's recipe):
+  1. memory model: find max micro-batch b under 1F1B and under BPipe;
+  2. single-stage benchmark at both b (here: measured on the CPU-scale
+     proxy stage; on a real cluster you'd run l/p layers on t chips);
+  3. eq. 4: predicted whole-model speedup;
+  4. verdict: worth it / not worth it (incl. BPipe traffic estimate).
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core import estimator as E  # noqa: E402
+from repro.core import memory_model as MM  # noqa: E402
+from repro.core import notation as N  # noqa: E402
+from repro.core.flops import model_flops_train  # noqa: E402
+from repro.models import model as M  # noqa: E402
+
+
+def measure_stage_time(cfg, b, s, layers=2):
+    """Proxy single-stage fwd+bwd wall time (CPU, reduced stage)."""
+    stage = dataclasses.replace(cfg.reduced(), num_layers=layers,
+                                dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), stage)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                              stage.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    f = jax.jit(jax.grad(lambda p: M.loss_fn(p, batch, stage)[0]))
+    jax.block_until_ready(f(params))  # compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        jax.block_until_ready(f(params))
+    return (time.perf_counter() - t0) / 3, stage
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-32b")
+    ap.add_argument("--p", type=int, default=8)
+    ap.add_argument("--t", type=int, default=4)
+    ap.add_argument("--B", type=int, default=128)
+    ap.add_argument("--s", type=int, default=64, help="proxy seq len")
+    ap.add_argument("--attention", default="flash",
+                    choices=["none", "recompute", "flash"])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    n = N.from_model(cfg, b=1, s=2048, B=args.B, p=args.p, t=args.t)
+
+    # 1. what does memory allow? (A100-80G per the paper's cluster)
+    b_1f1b = MM.max_micro_batch(n, args.attention, "1f1b", N.A100_HBM_BYTES, cfg)
+    b_bpipe = MM.max_micro_batch(n, args.attention, "bpipe", N.A100_HBM_BYTES, cfg)
+    print(f"[memory] {args.arch} p={args.p} t={args.t} att={args.attention}: "
+          f"max b under 1F1B={b_1f1b}, under BPipe={b_bpipe}")
+    if b_bpipe <= b_1f1b:
+        print("[verdict] BPipe unlocks no larger micro-batch here -> skip it.")
+        return
+
+    # 2. single-stage proxy measurements at both micro-batch sizes
+    t_y, stage = measure_stage_time(cfg, b_1f1b, args.s)
+    t_x, _ = measure_stage_time(cfg, b_bpipe, args.s)
+    fl = model_flops_train(stage, 1, args.s)
+    mfu_y = b_1f1b * fl / t_y
+    mfu_x = b_bpipe * fl / t_x  # relative units cancel in eq. 4
+    print(f"[stage] T({b_1f1b})={t_y*1e3:.1f}ms T({b_bpipe})={t_x*1e3:.1f}ms "
+          f"-> stage-MFU ratio {mfu_x/mfu_y:.3f}")
+
+    # 3. eq. 4 + the break-even corollary
+    nx = n.replace(b=b_bpipe)
+    sp = E.speedup(nx, b_bpipe, b_1f1b, mfu_x, mfu_y)
+    need = E.required_stage_gain(n, b_bpipe, b_1f1b)
+    traffic = MM.eviction_bytes(nx, args.attention) / 2**30
+    print(f"[eq.4] predicted whole-model speedup "
+          f"(upper bound, BPipe overhead ignored): {sp:.3f}x")
+    print(f"[break-even] stage-MFU gain required just to cover the larger "
+          f"bubble: {need:.3f}x (measured {mfu_x/mfu_y:.3f}x)")
+    print(f"[traffic] {traffic:.2f} GiB per evicted microbatch-stash; "
+          f"1-hop on the pair-adjacent layout")
+
+    # 4. verdict, with the paper's own caution
+    if sp > 1.05:
+        print(f"[verdict] >5% headroom -> BPipe likely worth implementing.")
+    else:
+        print("[verdict] headroom within BPipe's own overhead "
+              "(the paper's LLaMA/flash case) -> NOT worth it.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: a multi-pod JAX training framework reproducing and extending
+"Re-evaluating the Memory-balanced Pipeline Parallelism: BPipe"
+(Huang et al., Meituan 2024)."""
+__version__ = "0.1.0"

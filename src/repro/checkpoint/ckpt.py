@@ -1,0 +1,67 @@
+"""Flat-npz pytree checkpointing with path-keyed entries.
+
+No orbax in this container; this is a self-contained, restartable format:
+leaves are saved under their tree paths, restored against a template
+(shape/dtype checked), so params + AdamState round-trip exactly.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+import ml_dtypes
+
+# dtypes numpy can't serialize natively: stored as bit-equal uint views
+_VIEW = {np.dtype(ml_dtypes.bfloat16): np.dtype(np.uint16)}
+_UNVIEW = {v: k for k, v in _VIEW.items()}
+
+
+def _key(path) -> str:
+    return "/".join(
+        str(getattr(e, "key", getattr(e, "name", getattr(e, "idx", e))))
+        for e in path)
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        if arr.dtype in _VIEW:
+            out["__view__/" + _key(path)] = arr.view(_VIEW[arr.dtype])
+        else:
+            out[_key(path)] = arr
+    return out
+
+
+def save(path: str, tree: Any) -> None:
+    tmp = path + ".tmp"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def restore(path: str, template: Any) -> Any:
+    with np.load(path) as data:
+        flat = dict(data)
+    leaves, _ = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for p, leaf in leaves:
+        key = _key(p)
+        want = np.asarray(leaf).dtype
+        if key in flat:
+            arr = flat[key]
+        elif "__view__/" + key in flat:
+            arr = flat["__view__/" + key]
+            arr = arr.view(_UNVIEW.get(arr.dtype, arr.dtype))
+        else:
+            raise KeyError(f"checkpoint missing {key}")
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"{key}: shape {arr.shape} != {np.shape(leaf)}")
+        if arr.dtype != want:
+            arr = arr.astype(want)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out)

@@ -1,0 +1,5 @@
+"""The paper's primary contribution: BPipe memory-balanced pipeline
+parallelism — schedules, eviction planning, analytical memory model,
+the paper-§4 performance estimator, and a discrete-event pipeline simulator.
+"""
+from repro.core import bpipe, estimator, flops, memory_model, notation, schedule, simulator  # noqa: F401

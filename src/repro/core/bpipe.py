@@ -1,0 +1,80 @@
+"""BPipe planning: evictor/acceptor pairing, eviction counts, and the
+pair-adjacent device layout (paper Fig. 2) adapted to the TPU ICI ring.
+
+On GPUs the pair must share a node to ride NVLink; on a TPU ring/torus the
+equivalent constraint is *hop distance 1* on the stage mesh axis. The
+interleaved layout [0, p-1, 1, p-2, ...] puts every (x, p-1-x) pair on
+neighbouring devices, so each eviction is a single collective_permute hop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.schedule import bpipe_cap, bpipe_pairs, num_evictions
+
+
+@dataclasses.dataclass(frozen=True)
+class BPipePlan:
+    p: int
+    m: int                       # microbatches
+    cap: int
+    pairs: Tuple[Tuple[int, int], ...]
+    evictions: Tuple[int, ...]   # per-stage eviction count
+    stage_to_device: Tuple[int, ...]
+
+    @property
+    def partner(self) -> Dict[int, int]:
+        d = {}
+        for a, b in self.pairs:
+            d[a] = b
+            d[b] = a
+        return d
+
+
+def pair_adjacent_layout(p: int) -> List[int]:
+    """stage -> device index such that every (x, p-1-x) pair is adjacent.
+
+    [0, p-1, 1, p-2, ...]: device 2k hosts stage k, device 2k+1 hosts
+    stage p-1-k. For GPU nodes of size >=2 pairs share a node (Fig. 2);
+    on a TPU ring they are 1 ICI hop apart.
+    """
+    layout = [0] * p
+    for k in range(p // 2):
+        layout[k] = 2 * k
+        layout[p - 1 - k] = 2 * k + 1
+    if p % 2:
+        layout[p // 2] = p - 1
+    return layout
+
+
+def plan(p: int, m: int) -> BPipePlan:
+    return BPipePlan(
+        p=p, m=m, cap=bpipe_cap(p),
+        pairs=tuple(bpipe_pairs(p)),
+        evictions=tuple(num_evictions(p, m, i) for i in range(p)),
+        stage_to_device=tuple(pair_adjacent_layout(p)),
+    )
+
+
+def hop_distance(plan_: BPipePlan, ring_size: Optional[int] = None) -> Dict[Tuple[int, int], int]:
+    """ICI ring hop distance between each evictor/acceptor pair."""
+    n = ring_size or plan_.p
+    out = {}
+    for a, b in plan_.pairs:
+        da, db = plan_.stage_to_device[a], plan_.stage_to_device[b]
+        d = abs(da - db)
+        out[(a, b)] = min(d, n - d)
+    return out
+
+
+def node_of(device: int, node_size: int) -> int:
+    return device // node_size
+
+
+def pairs_within_node(plan_: BPipePlan, node_size: int) -> bool:
+    """Paper Fig. 2 property: every pair lives on one node (GPU view)."""
+    return all(
+        node_of(plan_.stage_to_device[a], node_size)
+        == node_of(plan_.stage_to_device[b], node_size)
+        for a, b in plan_.pairs)

@@ -1,0 +1,124 @@
+"""Analytical per-stage memory model for pipeline-parallel training.
+
+Activation-per-layer formulas follow Korthikanti et al. ("Reducing
+Activation Recomputation in Large Transformer Models"), which the paper
+cites for its recompute arms. All sizes in bytes, bf16 activations,
+sequence parallelism enabled (as the paper's runs: "enabled sequence
+parallelism technique").
+
+Attention arms (paper Table 3):
+  none      - full activations:        s*b*h*(34 + 5*a*s/h) / t
+  recompute - attention recomputed:    s*b*h*34 / t
+  flash     - flash attention stores no s^2 intermediates: same 34sbh/t
+              (plus the small log-sum-exp, ignored like the paper does)
+
+Param/optimizer state: mixed-precision Adam = 18 bytes/param
+(bf16 param+grad: 4, fp32 master+m+v: 12, +2 slack for fp32 grad accum
+on the way into the optimizer — Megatron's distributed-optimizer-off
+configuration, matching the paper's setup).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig
+from repro.core import schedule as sched
+from repro.core.notation import Notation
+
+BYTES_PER_PARAM = 18.0
+
+
+def act_bytes_per_layer(n: Notation, attention: str) -> float:
+    """Stashed activation bytes per layer per microbatch."""
+    base = 34.0 * n.s * n.b * n.h / n.t
+    if attention == "none":
+        base += 5.0 * n.a * n.s * n.s * n.b / n.t
+    elif attention in ("recompute", "flash"):
+        pass
+    else:
+        raise ValueError(attention)
+    return base
+
+
+def act_bytes_per_stage(n: Notation, attention: str) -> float:
+    """One microbatch's stash for one pipeline stage (l/p layers) +
+    the boundary input activation (2sbh/t)."""
+    layers = n.l / n.p
+    return layers * act_bytes_per_layer(n, attention) + 2.0 * n.s * n.b * n.h / n.t
+
+
+def param_bytes_per_stage(n: Notation, cfg: ModelConfig = None) -> float:
+    """Parameter + grad + optimizer bytes per device for one stage."""
+    if cfg is not None:
+        params = cfg.param_count() / n.p / n.t
+    else:
+        # GPT-like: 12 l h^2 block params + embeddings on first/last stage
+        params = (12.0 * n.l * n.h**2 / n.p + 2 * n.v * n.h / n.p) / n.t
+    return params * BYTES_PER_PARAM
+
+
+@dataclasses.dataclass
+class StageMemory:
+    stage: int
+    peak_stash: int           # activations held at peak (incl. foreign)
+    act_bytes: float
+    param_bytes: float
+
+    @property
+    def total(self) -> float:
+        return self.act_bytes + self.param_bytes
+
+
+def per_stage_memory(n: Notation, attention: str, kind: str,
+                     cfg: ModelConfig = None) -> List[StageMemory]:
+    """Peak memory per pipeline stage under schedule ``kind``."""
+    m = n.num_micro
+    peaks = sched.peak_stash(kind, n.p, m)
+    per_mb = act_bytes_per_stage(n, attention)
+    pb = param_bytes_per_stage(n, cfg)
+    out = []
+    for i in range(n.p):
+        out.append(StageMemory(
+            stage=i, peak_stash=peaks[i],
+            act_bytes=peaks[i] * per_mb, param_bytes=pb))
+    return out
+
+
+def max_stage_bytes(n: Notation, attention: str, kind: str,
+                    cfg: ModelConfig = None) -> float:
+    return max(s.total for s in per_stage_memory(n, attention, kind, cfg))
+
+
+def fits(n: Notation, attention: str, kind: str, device_bytes: float,
+         cfg: ModelConfig = None, workspace: float = 4 * 1024**3) -> bool:
+    """Does every stage fit in device memory (leaving CUDA/XLA workspace)?"""
+    return max_stage_bytes(n, attention, kind, cfg) + workspace <= device_bytes
+
+
+def max_micro_batch(n: Notation, attention: str, kind: str,
+                    device_bytes: float, cfg: ModelConfig = None) -> int:
+    """Largest b (power of two, dividing B) that fits — the quantity BPipe
+    unlocks (paper §4: 'we primarily use the reduced device memory to
+    increase the micro batch size')."""
+    best = 0
+    b = 1
+    while b <= n.B:
+        if n.B % b == 0:
+            if fits(n.replace(b=b), attention, kind, device_bytes, cfg):
+                best = b
+        b *= 2
+    return best
+
+
+def eviction_bytes(n: Notation, attention: str) -> float:
+    """Bytes moved per EVICT/LOAD (one microbatch's stage stash)."""
+    return act_bytes_per_stage(n, attention)
+
+
+def balance_report(n: Notation, attention: str) -> Dict[str, List[float]]:
+    """1F1B vs BPipe per-stage activation bytes (the Fig.1 story)."""
+    out = {}
+    for kind in ("1f1b", "bpipe"):
+        out[kind] = [s.act_bytes for s in per_stage_memory(n, attention, kind)]
+    return out

@@ -1,0 +1,234 @@
+"""Pipeline schedules as per-stage instruction streams.
+
+Ops:
+  F(mb)      forward of microbatch mb
+  B(mb)      backward of microbatch mb
+  EVICT(mb)  (BPipe, evictor only) ship mb's stashed activation to partner
+  LOAD(mb)   (BPipe, evictor only) fetch it back ahead of B(mb)
+
+The streams are *data*: both the discrete-event simulator (core/simulator)
+and the executable runtime (pipeline/executor) interpret them, which keeps
+"what BPipe does" in exactly one place.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+F, B, EVICT, LOAD = "F", "B", "EVICT", "LOAD"
+
+
+@dataclasses.dataclass(frozen=True)
+class Instr:
+    op: str
+    mb: int
+    chunk: int = 0   # virtual-stage chunk (interleaved schedules only)
+
+    def __repr__(self):
+        c = f".c{self.chunk}" if self.chunk else ""
+        return f"{self.op}{self.mb}{c}"
+
+
+Stream = List[Instr]
+
+
+def gpipe(p: int, m: int, stage: int) -> Stream:
+    """All forwards, then all backwards. Peak stash = m."""
+    return [Instr(F, j) for j in range(m)] + [Instr(B, j) for j in range(m)]
+
+
+def one_f_one_b(p: int, m: int, stage: int) -> Stream:
+    """Non-interleaved 1F1B (DAPPLE / Megatron default).
+
+    Stage i runs min(p-i-1, m) warmup forwards, then alternates F/B, then
+    drains. Peak in-flight stash = min(p - i, m)  — the paper's "stage x
+    stores p - x activations" imbalance.
+    """
+    warmup = min(p - stage - 1, m)
+    out: Stream = [Instr(F, j) for j in range(warmup)]
+    nf, nb = warmup, 0
+    while nf < m:
+        out.append(Instr(F, nf)); nf += 1
+        out.append(Instr(B, nb)); nb += 1
+    while nb < m:
+        out.append(Instr(B, nb)); nb += 1
+    return out
+
+
+def bpipe_cap(p: int) -> int:
+    """BPipe's per-device activation bound: ceil((p+2)/2)."""
+    return (p + 2 + 1) // 2
+
+
+def bpipe_pairs(p: int) -> List[Tuple[int, int]]:
+    """(evictor, acceptor) pairs: stage x < floor(p/2) pairs with p-1-x."""
+    return [(x, p - 1 - x) for x in range(p // 2)]
+
+
+def _balance(base: Stream, cap: int) -> Stream:
+    """BPipe's continuous balancing over any F/B stream: whenever the
+    local stash would exceed ``cap`` (including the in-flight LOAD
+    transient), the unit whose backward is farthest away (the newest
+    held) is shipped to the partner right after a forward, and fetched
+    back just before its own backward. Units are (mb, chunk)."""
+    evicted: set = set()
+    held: list = []                   # local stash, oldest first
+    out: Stream = []
+    for pos, ins in enumerate(base):
+        key = (ins.mb, ins.chunk)
+        if ins.op == F:
+            # Will the next backward's LOAD land while this F's output is
+            # still held? Then budget one extra slot for it.
+            nxt = base[pos + 1] if pos + 1 < len(base) else None
+            pending = 1 if (nxt is not None and nxt.op == B
+                            and (nxt.mb, nxt.chunk) in evicted) else 0
+            # Proactively make room *before* computing the forward.
+            while len(held) + 1 + pending > cap:
+                vmb, vchunk = held.pop()   # newest held
+                out.append(Instr(EVICT, vmb, vchunk))
+                evicted.add((vmb, vchunk))
+            out.append(ins)
+            held.append(key)
+        else:  # B
+            if key in evicted:
+                out.append(Instr(LOAD, ins.mb, ins.chunk))
+                evicted.discard(key)
+                held.append(key)
+            out.append(ins)
+            held.remove(key)
+    return out
+
+
+def bpipe(p: int, m: int, stage: int) -> Stream:
+    """BPipe = 1F1B + continuous activation balancing at cap
+    ceil((p+2)/2) (Kim et al.). Stages with steady in-flight
+    p-stage <= cap never evict (acceptors / middle stages). In steady
+    state every forward evicts and every backward reloads — the traffic
+    is continuous, which is why overlap (NVLink / 1-hop ICI) is
+    load-bearing for BPipe's viability; the simulator charges it.
+    """
+    return _balance(one_f_one_b(p, m, stage), bpipe_cap(p))
+
+
+# ---------------------------------------------------------------------------
+# Interleaved (virtual-chunk) 1F1B — beyond-paper extension
+# ---------------------------------------------------------------------------
+def one_f_one_b_interleaved(p: int, m: int, stage: int, v: int = 2) -> Stream:
+    """Megatron interleaved 1F1B: device ``stage`` hosts v model chunks
+    (virtual stages stage + c*p). Bubble shrinks ~v-fold; warmup stash
+    grows to 2(p-stage-1) + (v-1)p + 1 units (each 1/v the layers).
+    Requires m % p == 0 and v >= 2."""
+    assert v >= 2 and m % p == 0, (v, m, p)
+    total = m * v
+
+    def fwd_unit(k):
+        group, rem = divmod(k, p * v)
+        return rem // p, group * p + rem % p       # (chunk, mb)
+
+    def bwd_unit(k):
+        group, rem = divmod(k, p * v)
+        return v - 1 - rem // p, group * p + rem % p
+
+    warmup = min((p - stage - 1) * 2 + (v - 1) * p, total)
+    out: Stream = []
+    nf = nb = 0
+    for _ in range(warmup):
+        c, mb = fwd_unit(nf)
+        out.append(Instr(F, mb, c))
+        nf += 1
+    while nf < total:
+        c, mb = fwd_unit(nf)
+        out.append(Instr(F, mb, c))
+        nf += 1
+        c, mb = bwd_unit(nb)
+        out.append(Instr(B, mb, c))
+        nb += 1
+    while nb < total:
+        c, mb = bwd_unit(nb)
+        out.append(Instr(B, mb, c))
+        nb += 1
+    return out
+
+
+def interleaved_peak(p: int, m: int, stage: int, v: int = 2) -> int:
+    """In-flight stash units at peak under interleaved 1F1B."""
+    return min((p - stage - 1) * 2 + (v - 1) * p, m * v) + 1
+
+
+def bpipe_interleaved_cap(p: int, v: int = 2) -> int:
+    """BPipe bound generalized to v chunks: the pair-summed peak
+    2(p-1) + 2(v-1)p + 2 is stage-independent (the same symmetry the
+    paper's pairing exploits), so the balanced per-device bound is half
+    of it plus the LOAD transient slot."""
+    pair_sum = 2 * (p - 1) + 2 * (v - 1) * p + 2
+    return (pair_sum + 1) // 2 + 1
+
+
+def bpipe_interleaved(p: int, m: int, stage: int, v: int = 2) -> Stream:
+    """BPipe x interleaved-1F1B composition (not in either paper): the
+    same evict-newest/load-before-backward balancing applied to
+    (chunk, mb) units, bounded by ``bpipe_interleaved_cap``."""
+    return _balance(one_f_one_b_interleaved(p, m, stage, v),
+                    bpipe_interleaved_cap(p, v))
+
+
+def num_evictions(p: int, m: int, stage: int) -> int:
+    """How many EVICTs stage performs over a step (continuous balancing)."""
+    return sum(1 for ins in bpipe(p, m, stage) if ins.op == EVICT)
+
+
+SCHEDULES = {"gpipe": gpipe, "1f1b": one_f_one_b, "bpipe": bpipe}
+
+
+def build(kind: str, p: int, m: int) -> Dict[int, Stream]:
+    fn = SCHEDULES[kind]
+    return {i: fn(p, m, i) for i in range(p)}
+
+
+# ---------------------------------------------------------------------------
+# Stash accounting (drives the memory model + executor assertions)
+# ---------------------------------------------------------------------------
+def stash_trace(streams: Dict[int, Stream], p: int) -> Dict[int, List[int]]:
+    """Per-stage trace of LOCAL stashed-activation counts after each event,
+    including foreign stashes accepted from the paired evictor."""
+    partner = {}
+    for a, b in bpipe_pairs(p):
+        partner[a] = b
+        partner[b] = a
+    # Build a global event order: round-robin merge is enough for counting
+    # because EVICT/LOAD only move stash between fixed pairs.
+    counts = {i: 0 for i in range(p)}
+    traces = {i: [] for i in range(p)}
+    idx = {i: 0 for i in range(p)}
+    remaining = sum(len(s) for s in streams.values())
+    while remaining:
+        progressed = False
+        for i in range(p):
+            if idx[i] >= len(streams[i]):
+                continue
+            ins = streams[i][idx[i]]
+            idx[i] += 1
+            remaining -= 1
+            progressed = True
+            if ins.op == F:
+                counts[i] += 1
+            elif ins.op == B:
+                counts[i] -= 1
+            elif ins.op == EVICT:
+                counts[i] -= 1
+                counts[partner[i]] += 1
+                traces[partner[i]].append(counts[partner[i]])
+            elif ins.op == LOAD:
+                counts[i] += 1
+                counts[partner[i]] -= 1
+                traces[partner[i]].append(counts[partner[i]])
+            traces[i].append(counts[i])
+        assert progressed
+    return traces
+
+
+def peak_stash(kind: str, p: int, m: int) -> Dict[int, int]:
+    """Peak per-stage stash count (local + accepted foreign)."""
+    streams = build(kind, p, m)
+    traces = stash_trace(streams, p)
+    return {i: (max(t) if t else 0) for i, t in traces.items()}

@@ -1,0 +1,397 @@
+"""Flash-attention (forward) as a Pallas TPU kernel.
+
+TPU adaptation of flash-attention-2 (DESIGN.md §3): instead of warp-level
+tiling in SRAM, q/k/v tiles live in VMEM via BlockSpec, the score matmul
+feeds the 128x128 MXU (block sizes default to 128), and the online-softmax
+running max/denominator accumulate in fp32 VMEM scratch across the
+``arbitrary``-ordered kv grid dimension.
+
+GQA: the nq//nkv query heads sharing one kv head are carried as an extra
+in-tile axis m, so one kv tile is loaded once per m queries (the same
+reuse flash-attention-2 gets from its head grouping).
+
+Supports: causal masking, sliding-window (local) masking, gemma2-style
+logit softcap.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, softcap, block_q, block_k, nkv_blocks,
+            kv_len):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Block-level sparsity (EXPERIMENTS.md §Perf HC-1 insight: masking
+    # inside a dense op never saves work — skipping blocks does):
+    #   causal: kv blocks strictly above the diagonal contribute nothing;
+    #   window: kv blocks whose newest key is older than the oldest
+    #           query's horizon contribute nothing.
+    relevant = ki * block_k < kv_len
+    if causal:  # oldest query in this q tile vs newest key in kv tile
+        relevant &= ki * block_k <= qi * block_q + block_q - 1
+    if window:
+        relevant &= (ki + 1) * block_k - 1 > qi * block_q - window
+
+    @pl.when(relevant)
+    def _block():
+        q = q_ref[0, :, 0]                     # (bq, m, hd)
+        k = k_ref[0, :, 0]                     # (bk, hd)
+        v = v_ref[0, :, 0]                     # (bk, hd)
+        bq, m, hd = q.shape
+        bk = k.shape[0]
+
+        s = jax.lax.dot_general(
+            q.reshape(bq * m, hd).astype(jnp.float32),
+            k.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)     # (bq*m, bk)
+        s = s.reshape(bq, m, bk) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, m, bk), 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, m, bk), 2)
+        mask = kpos < kv_len                    # kv padding
+        if causal:
+            mask &= qpos >= kpos
+        if window:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                     # (bq, m)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])       # (bq, m, bk)
+        l_new = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.reshape(bq * m, bk), v.astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).reshape(bq, m, hd)
+        acc_scr[...] = acc_scr[...] * alpha[..., None] + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nkv_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0, :, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        lse_ref[0, :, 0] = (m_scr[...] + jnp.log(denom[..., 0])).astype(
+            lse_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        scale=None, block_q=128, block_k=128,
+                        interpret=False, return_lse=False):
+    """q: (b, sq, nq, hd); k/v: (b, sk, nkv, hd). Returns (b, sq, nq, hd)."""
+    b, sq, nq, hd = q.shape
+    sk, nkv = k.shape[1], k.shape[2]
+    assert nq % nkv == 0
+    m = nq // nkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+    qr = q.reshape(b, sq, nkv, m, hd)
+    if pad_q:
+        qr = jnp.pad(qr, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    kp, vp = k, v
+    if pad_k:
+        kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    sq_p, sk_p = sq + pad_q, sk + pad_k
+    nq_blocks, nkv_blocks = sq_p // block_q, sk_p // block_k
+
+    grid = (b, nkv, nq_blocks, nkv_blocks)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k,
+        nkv_blocks=nkv_blocks, kv_len=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, m, hd),
+                         lambda bb, g, qi, ki: (bb, qi, g, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bb, g, qi, ki: (bb, ki, g, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bb, g, qi, ki: (bb, ki, g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, 1, m, hd),
+                         lambda bb, g, qi, ki: (bb, qi, g, 0, 0)),
+            pl.BlockSpec((1, block_q, 1, m),
+                         lambda bb, g, qi, ki: (bb, qi, g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, sq_p, nkv, m, hd), q.dtype),
+            jax.ShapeDtypeStruct((b, sq_p, nkv, m), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, m), jnp.float32),
+            pltpu.VMEM((block_q, m), jnp.float32),
+            pltpu.VMEM((block_q, m, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(qr, kp, vp)
+    out, lse = out
+    out = out[:, :sq].reshape(b, sq, nq, hd)
+    if return_lse:
+        return out, lse[:, :sq]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels (flash-attention-2 style two-pass)
+# ---------------------------------------------------------------------------
+def _recompute_p(q, k, qi, ki, *, scale, causal, window, softcap, block_q,
+                 block_k, kv_len, lse):
+    """Recompute the (bq, m, bk) probability tile + softcap chain factor."""
+    bq, m, hd = q.shape
+    bk = k.shape[0]
+    s = jax.lax.dot_general(
+        q.reshape(bq * m, hd).astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(bq, m, bk) * scale
+    dcap = 1.0
+    if softcap:
+        t = jnp.tanh(s / softcap)
+        s = softcap * t
+        dcap = 1.0 - t * t           # d(softcap(s))/ds
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (bq, m, bk), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, m, bk), 2)
+    mask = kpos < kv_len
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - lse[..., None])  # masked entries -> exp(NEG_INF)=0
+    return p, dcap
+
+
+def _relevant(qi, ki, *, causal, window, block_q, block_k, kv_len):
+    rel = ki * block_k < kv_len
+    if causal:
+        rel &= ki * block_k <= qi * block_q + block_q - 1
+    if window:
+        rel &= (ki + 1) * block_k - 1 > qi * block_q - window
+    return rel
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dlt_ref, dq_ref,
+               acc_scr, *, scale, causal, window, softcap, block_q, block_k,
+               nkv_blocks, kv_len):
+    qi, ki = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(_relevant(qi, ki, causal=causal, window=window, block_q=block_q,
+                       block_k=block_k, kv_len=kv_len))
+    def _block():
+        q = q_ref[0, :, 0]
+        k = k_ref[0, :, 0]
+        v = v_ref[0, :, 0]
+        do = do_ref[0, :, 0].astype(jnp.float32)     # (bq, m, hd)
+        lse = lse_ref[0, :, 0]
+        dlt = dlt_ref[0, :, 0]                       # D = rowsum(do*o)
+        bq, m, hd = q.shape
+        bk = k.shape[0]
+        p, dcap = _recompute_p(
+            q, k, qi, ki, scale=scale, causal=causal, window=window,
+            softcap=softcap, block_q=block_q, block_k=block_k,
+            kv_len=kv_len, lse=lse)
+        dp = jax.lax.dot_general(
+            do.reshape(bq * m, hd), v.astype(jnp.float32),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32).reshape(bq, m, bk)
+        ds = p * (dp - dlt[..., None]) * dcap * scale
+        acc_scr[...] += jax.lax.dot_general(
+            ds.reshape(bq * m, bk), k.astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).reshape(bq, m, hd)
+
+    @pl.when(ki == nkv_blocks - 1)
+    def _finish():
+        dq_ref[0, :, 0] = acc_scr[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dlt_ref,
+                dk_ref, dv_ref, dk_scr, dv_scr, *, scale, causal, window,
+                softcap, block_q, block_k, nq_blocks, kv_len):
+    ki, qi = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    @pl.when(_relevant(qi, ki, causal=causal, window=window, block_q=block_q,
+                       block_k=block_k, kv_len=kv_len))
+    def _block():
+        q = q_ref[0, :, 0]
+        k = k_ref[0, :, 0]
+        v = v_ref[0, :, 0]
+        do = do_ref[0, :, 0].astype(jnp.float32)
+        lse = lse_ref[0, :, 0]
+        dlt = dlt_ref[0, :, 0]
+        bq, m, hd = q.shape
+        bk = k.shape[0]
+        p, dcap = _recompute_p(
+            q, k, qi, ki, scale=scale, causal=causal, window=window,
+            softcap=softcap, block_q=block_q, block_k=block_k,
+            kv_len=kv_len, lse=lse)
+        # dv += p^T do   (sum over bq*m rows)
+        dv_scr[...] += jax.lax.dot_general(
+            p.reshape(bq * m, bk), do.reshape(bq * m, hd),
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(
+            do.reshape(bq * m, hd), v.astype(jnp.float32),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32).reshape(bq, m, bk)
+        ds = p * (dp - dlt[..., None]) * dcap * scale
+        dk_scr[...] += jax.lax.dot_general(
+            ds.reshape(bq * m, bk), q.reshape(bq * m, hd).astype(jnp.float32),
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(qi == nq_blocks - 1)
+    def _finish():
+        dk_ref[0, :, 0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, :, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, out, lse, dout, *, causal=True, window=0,
+                        softcap=0.0, scale=None, block_q=128, block_k=128,
+                        interpret=False):
+    """dq, dk, dv via the two-pass flash backward.
+
+    q/dout: (b, sq, nq, hd); k/v: (b, sk, nkv, hd);
+    lse: (b, sq, nkv, m) from the forward.
+    """
+    b, sq, nq, hd = q.shape
+    sk, nkv = k.shape[1], k.shape[2]
+    m = nq // nkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                            # (b, sq, nq)
+    delta = delta.reshape(b, sq, nkv, m)
+
+    qr = q.reshape(b, sq, nkv, m, hd)
+    dor = dout.reshape(b, sq, nkv, m, hd)
+    if pad_q:
+        padq5 = ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0))
+        qr = jnp.pad(qr, padq5)
+        dor = jnp.pad(dor, padq5)
+        lse = jnp.pad(lse, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        delta = jnp.pad(delta, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp, vp = k, v
+    if pad_k:
+        kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    sq_p, sk_p = sq + pad_q, sk + pad_k
+    nq_blocks, nkv_blocks = sq_p // block_q, sk_p // block_k
+
+    # NOTE: index maps differ between the two passes; built per pass.
+    common = dict(scale=scale, causal=causal, window=window, softcap=softcap,
+                  block_q=block_q, block_k=block_k, kv_len=sk)
+
+    # --- pass 1: dq; grid (b, nkv, q_blocks, kv_blocks[arbitrary]) ----------
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, nkv_blocks=nkv_blocks, **common),
+        grid=(b, nkv, nq_blocks, nkv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, m, hd),
+                         lambda bb, g, qi, ki: (bb, qi, g, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bb, g, qi, ki: (bb, ki, g, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bb, g, qi, ki: (bb, ki, g, 0)),
+            pl.BlockSpec((1, block_q, 1, m, hd),
+                         lambda bb, g, qi, ki: (bb, qi, g, 0, 0)),
+            pl.BlockSpec((1, block_q, 1, m),
+                         lambda bb, g, qi, ki: (bb, qi, g, 0)),
+            pl.BlockSpec((1, block_q, 1, m),
+                         lambda bb, g, qi, ki: (bb, qi, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, m, hd),
+                               lambda bb, g, qi, ki: (bb, qi, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq_p, nkv, m, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, m, hd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(qr, kp, vp, dor, lse, delta)
+
+    # --- pass 2: dk/dv; grid (b, nkv, kv_blocks, q_blocks[arbitrary]) -------
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, nq_blocks=nq_blocks, **common),
+        grid=(b, nkv, nkv_blocks, nq_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, m, hd),
+                         lambda bb, g, ki, qi: (bb, qi, g, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bb, g, ki, qi: (bb, ki, g, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bb, g, ki, qi: (bb, ki, g, 0)),
+            pl.BlockSpec((1, block_q, 1, m, hd),
+                         lambda bb, g, ki, qi: (bb, qi, g, 0, 0)),
+            pl.BlockSpec((1, block_q, 1, m),
+                         lambda bb, g, ki, qi: (bb, qi, g, 0)),
+            pl.BlockSpec((1, block_q, 1, m),
+                         lambda bb, g, ki, qi: (bb, qi, g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bb, g, ki, qi: (bb, ki, g, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda bb, g, ki, qi: (bb, ki, g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, sk_p, nkv, hd), k.dtype),
+            jax.ShapeDtypeStruct((b, sk_p, nkv, hd), v.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_k, hd), jnp.float32),
+                        pltpu.VMEM((block_k, hd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(qr, kp, vp, dor, lse, delta)
+
+    dq = dq[:, :sq].reshape(b, sq, nq, hd)
+    return dq, dk[:, :sk], dv[:, :sk]

@@ -1,0 +1,63 @@
+"""Fused scale+mask+softmax Pallas kernel (fwd + bwd).
+
+This is the kernel whose absence the paper identified as the real source
+of BPipe's GPT-3 "win" (its §3.2): at b=1 Megatron ran unfused
+fp16->fp32 upcast, scale, softmax, downcast kernels; at b=2 the fused
+kernel kicked in and alone delivered most of the speedup. We provide the
+TPU analogue: one VMEM-resident row-tile pass. (On TPU, XLA already fuses
+this chain — benchmarks/kernel_bench quantifies both paths.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def _fwd_kernel(x_ref, o_ref, *, scale, causal, block_rows, sk):
+    x = x_ref[...].astype(jnp.float32) * scale    # (block_rows, sk)
+    if causal:
+        ri = pl.program_id(0)
+        rows = ri * block_rows + jax.lax.broadcasted_iota(
+            jnp.int32, x.shape, 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+        x = jnp.where((rows % sk) >= cols, x, NEG_INF)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+def _bwd_kernel(y_ref, dy_ref, dx_ref, *, scale):
+    y = y_ref[...].astype(jnp.float32)
+    dy = dy_ref[...].astype(jnp.float32)
+    dot = jnp.sum(y * dy, axis=-1, keepdims=True)
+    dx_ref[...] = ((y * (dy - dot)) * scale).astype(dx_ref.dtype)
+
+
+def _rows_call(kernel, x_like, n_in, block_rows, interpret, dtype=None):
+    rows, sk = x_like.shape
+    grid = (rows // block_rows,)
+    spec = pl.BlockSpec((block_rows, sk), lambda i: (i, 0))
+    return pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[spec] * n_in,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, sk), dtype or x_like.dtype),
+        interpret=interpret)
+
+
+def fused_softmax_fwd(x2d, *, scale, causal, block_rows, interpret):
+    rows, sk = x2d.shape
+    kernel = functools.partial(_fwd_kernel, scale=scale, causal=causal,
+                               block_rows=block_rows, sk=sk)
+    return _rows_call(kernel, x2d, 1, block_rows, interpret)(x2d)
+
+
+def fused_softmax_bwd(y2d, dy2d, *, scale, block_rows, interpret):
+    kernel = functools.partial(_bwd_kernel, scale=scale)
+    return _rows_call(kernel, y2d, 2, block_rows, interpret)(y2d, dy2d)

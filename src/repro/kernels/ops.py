@@ -1,0 +1,107 @@
+"""Jit-ready public wrappers for the Pallas kernels.
+
+``flash_attention``: Pallas forward + Pallas two-pass backward (dq and
+dk/dv kernels recomputing probabilities from the saved LSE — the
+flash-attention-2 scheme).
+``fused_softmax``: Pallas forward and backward kernels via custom_vjp.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_softmax as _fs
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import (flash_attention_bwd,
+                                           flash_attention_fwd)
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def flash_attention(q, k, v, causal=True, window=0, softcap=0.0,
+                    scale=None, block_q=128, block_k=128, interpret=False):
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def _fa_fwd(q, k, v, causal, window, softcap, scale, block_q, block_k,
+            interpret):
+    out, lse = flash_attention_fwd(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret,
+        return_lse=True)
+    return out, (q, k, v, out, lse)
+
+
+def _fa_bwd(causal, window, softcap, scale, block_q, block_k, interpret,
+            res, g):
+    q, k, v, out, lse = res
+    return flash_attention_bwd(
+        q, k, v, out, lse, g, causal=causal, window=window, softcap=softcap,
+        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def fused_softmax(x, scale=1.0, causal=False, block_rows=256,
+                  interpret=False):
+    """x: (..., sq, sk) attention scores; fused upcast+scale+mask+softmax."""
+    return _fs_apply(x, scale, causal, block_rows, interpret)
+
+
+def _fs_apply(x, scale, causal, block_rows, interpret):
+    *lead, sq, sk = x.shape
+    if causal:
+        assert sq == sk, "causal fused softmax expects square scores"
+    rows = 1
+    for d in lead + [sq]:
+        rows *= d
+    br = min(block_rows, rows)
+    while rows % br:
+        br -= 1
+    y = _fs.fused_softmax_fwd(x.reshape(rows, sk), scale=scale,
+                              causal=causal, block_rows=br,
+                              interpret=interpret)
+    return y.reshape(x.shape)
+
+
+def _fsm_fwd(x, scale, causal, block_rows, interpret):
+    y = _fs_apply(x, scale, causal, block_rows, interpret)
+    return y, y
+
+
+def _fsm_bwd(scale, causal, block_rows, interpret, y, g):
+    *lead, sq, sk = y.shape
+    rows = 1
+    for d in lead + [sq]:
+        rows *= d
+    br = min(block_rows, rows)
+    while rows % br:
+        br -= 1
+    dx = _fs.fused_softmax_bwd(y.reshape(rows, sk), g.reshape(rows, sk),
+                               scale=scale, block_rows=br,
+                               interpret=interpret)
+    return (dx.reshape(y.shape),)
+
+
+fused_softmax.defvjp(_fsm_fwd, _fsm_bwd)
+
+
+def unfused_softmax_chain(x, scale=1.0, causal=False):
+    """The paper's exp-(7) *unfused* chain, staged as separate ops (upcast,
+    scale, mask, softmax, downcast) — the baseline kernel_bench compares
+    the fused kernel against."""
+    xf = x.astype(jnp.float32)
+    xf = xf * scale
+    if causal:
+        sq, sk = x.shape[-2:]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        xf = jnp.where(mask, xf, _ref.NEG_INF)
+    y = jax.nn.softmax(xf, axis=-1)
+    return y.astype(x.dtype)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Kernel tests sweep shapes/dtypes and assert allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        scale=None):
+    """q: (b, sq, nq, hd); k/v: (b, sk, nkv, hd), nq % nkv == 0."""
+    b, sq, nq, hd = q.shape
+    sk, nkv = k.shape[1], k.shape[2]
+    m = nq // nkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    qr = q.reshape(b, sq, nkv, m, hd)
+    s = jnp.einsum("bqgmh,bkgh->bgmqk", qr, k).astype(jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgmqk,bkgh->bqgmh", p, v)
+    return out.reshape(b, sq, nq, hd)
+
+
+def fused_softmax_ref(x, *, scale=1.0, causal=False):
+    """The paper's exp-(7) kernel chain: upcast -> scale -> (mask) ->
+    softmax -> downcast, as one fused op. x: (..., sq, sk)."""
+    xf = x.astype(jnp.float32) * scale
+    if causal:
+        sq, sk = x.shape[-2:]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        xf = jnp.where(mask, xf, NEG_INF)
+    return jax.nn.softmax(xf, axis=-1).astype(x.dtype)

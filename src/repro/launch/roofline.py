@@ -1,0 +1,111 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs / (chips x 197 TFLOP/s)
+    memory     = HLO_bytes / (chips x 819 GB/s)
+    collective = collective_bytes / (chips x 50 GB/s/link)
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes; collective bytes
+are parsed out of ``compiled.as_text()`` (operand sizes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute).
+
+CAVEAT + FIX: XLA's cost analysis counts a while/scan body ONCE, so a
+scan-over-blocks model under-reports by ~num_blocks. launch/dryrun.py
+therefore lowers two extra *unrolled* variants (1 block and 2 blocks,
+full dims) and extrapolates:  total = base + per_block x n_blocks, where
+per_block = cost(2 blocks) - cost(1 block) and base = cost(1) - per_block.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+from repro.core.notation import (TPU_V5E_HBM_BW, TPU_V5E_ICI_BW,
+                                 TPU_V5E_PEAK_BF16)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# `%x = bf16[8,128,16]{2,1,0} all-gather(...)`  (also matches -start ops)
+_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-kind output bytes (per device, post-SPMD HLO)."""
+    out = {k: 0.0 for k in COLLECTIVES}
+    seen_done = set()
+    for m in _RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[kind] += n * _DTYPE_BYTES[dtype]
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float            # per device
+    bytes_hbm: float        # per device
+    bytes_collective: float  # per device
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / TPU_V5E_PEAK_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / TPU_V5E_HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.bytes_collective / TPU_V5E_ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def step_time(self) -> float:
+        """Optimistic (perfect-overlap) step time = max of the three."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def mfu(self, model_flops_per_device: float) -> float:
+        return model_flops_per_device / (self.step_time * TPU_V5E_PEAK_BF16)
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops": self.flops, "bytes_hbm": self.bytes_hbm,
+            "bytes_collective": self.bytes_collective, "chips": self.chips,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+        }
+
+
+def extrapolate(cost1: Dict, cost2: Dict, n_blocks: int) -> Dict:
+    """total = base + per_block * n_blocks from 1- and 2-block unrolled runs."""
+    out = {}
+    keys = set(cost1) | set(cost2)
+    for k in keys:
+        c1, c2 = cost1.get(k, 0.0), cost2.get(k, 0.0)
+        per_block = max(c2 - c1, 0.0)
+        base = max(c1 - per_block, 0.0)
+        out[k] = base + per_block * n_blocks
+    return out

@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run lowers
+against these (weak-type-correct, shardable, zero allocation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import InputShape, base
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.model import ENCODER_FRAMES
+from repro.optim import adam
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B, s = shape.global_batch, shape.seq_len
+    n_text = s - (cfg.num_prefix_embeds if cfg.frontend == "vision" else 0)
+    out = {"tokens": sds((B, n_text), jnp.int32),
+           "labels": sds((B, n_text), jnp.int32)}
+    if cfg.frontend == "vision":
+        out["prefix_embeds"] = sds((B, cfg.num_prefix_embeds, cfg.d_model),
+                                   jnp.float32)
+    if cfg.is_encdec:
+        out["enc_embeds"] = sds((B, ENCODER_FRAMES, cfg.d_model), jnp.float32)
+    return out
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    out = train_batch_specs(cfg, shape)
+    out.pop("labels")
+    return out
+
+
+def param_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(M.init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def opt_specs(params_spec):
+    return jax.eval_shape(adam.init, params_spec)
+
+
+def decode_state_specs(cfg: ModelConfig, shape: InputShape):
+    return jax.eval_shape(
+        lambda: M.init_decode_state(cfg, shape.global_batch, shape.seq_len))
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape):
+    out = {"token": sds((shape.global_batch,), jnp.int32),
+           "pos": sds((), jnp.int32)}
+    if cfg.is_encdec:
+        out["enc_states"] = sds(
+            (shape.global_batch, ENCODER_FRAMES, cfg.d_model),
+            jnp.dtype(cfg.dtype))
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Everything the step for this shape kind consumes (sans params)."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape),
+                "state": decode_state_specs(cfg, shape)}
+    if shape.kind == "decode":
+        return {"state": decode_state_specs(cfg, shape),
+                **decode_input_specs(cfg, shape)}
+    raise ValueError(shape.kind)

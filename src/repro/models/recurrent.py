@@ -1,0 +1,121 @@
+"""Griffin/RecurrentGemma recurrent block: temporal conv + RG-LRU.
+
+RG-LRU (arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t + b_a)              (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)              (input gate)
+    log a_t = -c * softplus(Lambda) * r_t     (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+A diagonal linear recurrence => training uses ``jax.lax.associative_scan``
+(TPU-friendly: log-depth, no sequential loop); decoding is the single-step
+update. Block layout follows Griffin: two branches (conv+RG-LRU | GeLU
+gate), merged multiplicatively, projected back to d_model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _winit
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg):
+    d, w = cfg.d_model, cfg.rnn_width
+    ks = jax.random.split(key, 7)
+    import numpy as np
+    # Lambda init so that a = sigmoid(Lambda)^c is in ~(0.9, 0.999)
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^{-1}(-log u / c)
+    return {
+        "in_x": _winit(ks[0], (d, w), d),       # recurrent branch
+        "in_g": _winit(ks[1], (d, w), d),       # gate branch
+        "out": _winit(ks[2], (w, d), w),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, w)) * 0.1).astype(jnp.float32),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "wa": _winit(ks[4], (w, w), w),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wx": _winit(ks[6], (w, w), w),
+        "bx": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+    }
+
+
+def _gates(p, x):
+    """a (decay, fp32) and gated input for the recurrence."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["wa"] + p["ba"])
+    i = jax.nn.sigmoid(xf @ p["wx"] + p["bx"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    return a, gated
+
+
+def rglru_scan(p, x):
+    """Full-sequence RG-LRU via associative scan. x: (b, s, w)."""
+    a, gated = _gates(p, x)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(x.dtype)
+
+
+def rglru_step(p, x, h_prev):
+    """One decode step. x: (b, w); h_prev: (b, w) fp32."""
+    a, gated = _gates(p, x[:, None, :])
+    h = a[:, 0] * h_prev + gated[:, 0]
+    return h.astype(x.dtype), h
+
+
+def _conv_full(p, x):
+    """Causal depthwise conv, width cw. x: (b, s, w)."""
+    cw = p["conv_w"].shape[0]
+    out = x * p["conv_w"][cw - 1].astype(x.dtype)
+    for i in range(1, cw):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * p["conv_w"][cw - 1 - i].astype(x.dtype)
+    return out + p["conv_b"].astype(x.dtype)
+
+
+def _conv_step(p, x, conv_state):
+    """x: (b, w); conv_state: (b, cw-1, w) holding previous inputs."""
+    cw = p["conv_w"].shape[0]
+    window = jnp.concatenate([conv_state, x[:, None, :]], axis=1)  # (b, cw, w)
+    out = jnp.einsum("bcw,cw->bw", window, p["conv_w"].astype(x.dtype))
+    out = out + p["conv_b"].astype(x.dtype)
+    return out, window[:, 1:]
+
+
+def init_rglru_state(cfg, batch, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.rnn_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.rnn_width), dtype),
+    }
+
+
+def apply_rglru_block(p, x, cfg):
+    """Train/prefill path. x: (b, s, d) -> (b, s, d)."""
+    dt = x.dtype
+    u = x @ p["in_x"].astype(dt)
+    g = jax.nn.gelu(x @ p["in_g"].astype(dt))
+    u = _conv_full(p, u)
+    h = rglru_scan(p, u)
+    return (h * g) @ p["out"].astype(dt)
+
+
+def apply_rglru_block_step(p, x, cfg, state):
+    """Decode path. x: (b, 1, d) -> ((b, 1, d), state)."""
+    dt = x.dtype
+    x1 = x[:, 0]
+    u = x1 @ p["in_x"].astype(dt)
+    g = jax.nn.gelu(x1 @ p["in_g"].astype(dt))
+    u, conv = _conv_step(p, u, state["conv"])
+    h, hf = rglru_step(p, u, state["h"])
+    out = (h * g) @ p["out"].astype(dt)
+    return out[:, None], {"h": hf, "conv": conv}

@@ -1,0 +1,234 @@
+"""xLSTM cells (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, sequential scan with recurrent h-feedback).
+
+TPU adaptation: mLSTM training uses a *chunkwise* formulation — intra-chunk
+work is dense (L x L) matmuls on the MXU, inter-chunk state flows through a
+short ``lax.scan`` — instead of a 1-step-per-token recurrence. The exact
+sequential form (``mlstm_sequential``) is kept as the oracle and is what
+the decode step uses. All gate bookkeeping is log-space stabilized (m).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _winit
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm(key, cfg):
+    d, nh, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": _winit(ks[0], (d, nh, hd), d),
+        "wk": _winit(ks[1], (d, nh, hd), d),
+        "wv": _winit(ks[2], (d, nh, hd), d),
+        "wo": _winit(ks[3], (nh, hd, d), nh * hd),
+        "wif": _winit(ks[4], (d, nh, 2), d),       # i~, f~ preacts per head
+        "bif": jnp.concatenate(
+            [jnp.zeros((nh, 1)), 3.0 * jnp.ones((nh, 1))], axis=1).astype(jnp.float32),
+        "wog": _winit(ks[5], (d, nh, hd), d),      # output gate
+    }
+
+
+def _mlstm_qkvg(p, x, cfg):
+    dt = x.dtype
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"].astype(dt)) * scale
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"].astype(dt))
+    gates = jnp.einsum("bsd,dng->bsng", x, p["wif"].astype(dt)).astype(jnp.float32)
+    gates = gates + p["bif"]
+    li = gates[..., 0]                              # (b, s, nh) log-input preact
+    lf = jax.nn.log_sigmoid(gates[..., 1])          # log forget gate
+    og = jax.nn.sigmoid(
+        jnp.einsum("bsd,dnh->bsnh", x, p["wog"].astype(dt)).astype(jnp.float32))
+    return q, k, v, li, lf, og
+
+
+def init_mlstm_state(cfg, batch):
+    nh, hd = cfg.num_heads, cfg.head_dim
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), jnp.float32),  # (key, value)
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), -jnp.inf, jnp.float32),
+    }
+
+
+def _mlstm_step_core(q, k, v, li, lf, state):
+    """One stabilized mLSTM step. q/k/v: (b, nh, hd) fp32; li/lf: (b, nh)."""
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fp = jnp.exp(lf + m - m_new)          # decays; exp(-inf - ...) -> 0 ok
+    ip = jnp.exp(li - m_new)
+    C = fp[..., None, None] * C + ip[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = fp[..., None] * n + ip[..., None] * k
+    num = jnp.einsum("bnk,bnkv->bnv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bnk,bnk->bn", q, n)), jnp.exp(-m_new))
+    h = num / den[..., None]
+    return h, {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_sequential(p, x, cfg, state=None):
+    """Oracle: step-by-step scan over time. x: (b, s, d) -> (b, s, nh, hd)."""
+    b = x.shape[0]
+    q, k, v, li, lf, og = _mlstm_qkvg(p, x, cfg)
+    state = state or init_mlstm_state(cfg, b)
+
+    def body(st, inp):
+        qt, kt, vt, lit, lft = inp
+        h, st = _mlstm_step_core(qt, kt, vt, lit, lft, st)
+        return st, h
+
+    xs = (q.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          li.transpose(1, 0, 2), lf.transpose(1, 0, 2))
+    state, hs = jax.lax.scan(body, state, xs)
+    h = hs.transpose(1, 0, 2, 3) * og[..., :, :]   # (b, s, nh, hd)
+    return h.astype(x.dtype), state
+
+
+def mlstm_chunkwise(p, x, cfg, state=None):
+    """Chunkwise-parallel mLSTM (matches mlstm_sequential to fp32 tolerance).
+
+    Chunks of length L: intra-chunk attention-like matmuls + inter-chunk
+    state carried by a scan over s/L steps.
+    """
+    b, s0, d = x.shape
+    nh, hd = cfg.num_heads, cfg.head_dim
+    L = min(cfg.chunk_size, s0)
+    pad = (-s0) % L
+    if pad:  # causal: trailing zero-pad never influences earlier outputs
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    s = s0 + pad
+    nc = s // L
+    q, k, v, li, lf, og = _mlstm_qkvg(p, x, cfg)
+    if pad:  # make pad steps state-neutral: f=1 (no decay), i=0 (no write)
+        valid = (jnp.arange(s) < s0)[None, :, None]
+        li = jnp.where(valid, li, -jnp.inf)
+        lf = jnp.where(valid, lf, 0.0)
+
+    qc = jnp.moveaxis(q.reshape(b, nc, L, nh, hd), 3, 2).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    kc = jnp.moveaxis(k.reshape(b, nc, L, nh, hd), 3, 2).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    vc = jnp.moveaxis(v.reshape(b, nc, L, nh, hd), 3, 2).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    lic = li.reshape(b, nc, L, nh).transpose(1, 0, 3, 2)        # (nc, b, nh, L)
+    lfc = lf.reshape(b, nc, L, nh).transpose(1, 0, 3, 2)
+
+    state = state or init_mlstm_state(cfg, b)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_body(st, inp):
+        qt, kt, vt, lit, lft = inp                  # (b, nh, L, hd) / (b, nh, L)
+        C0, n0, m0 = st["C"], st["n"], st["m"]
+        g = jnp.cumsum(lft, axis=-1)                # inclusive decay cumsum
+        sj = lit - g                                # s_j = li_j - g_j
+        M = jnp.maximum(m0[..., None], jax.lax.cummax(sj, axis=sj.ndim - 1))
+        # intra-chunk: D_tj = exp(s_j - M_t), j <= t
+        D = jnp.exp(sj[..., None, :] - M[..., :, None])
+        D = jnp.where(causal, D, 0.0)
+        scores = jnp.einsum("bnth,bnjh->bntj", qt, kt) * D
+        num = jnp.einsum("bntj,bnjh->bnth", scores, vt)
+        # inter-chunk contributions
+        w_inter = jnp.exp(m0[..., None] - M)        # (b, nh, L)
+        num = num + w_inter[..., None] * jnp.einsum("bnth,bnhv->bntv", qt, C0)
+        qn = jnp.einsum("bnth,bnh->bnt", qt, n0) * w_inter
+        qn_intra = jnp.sum(scores, axis=-1)         # sum_j D_tj (q_t . k_j)
+        m_tot = g + M
+        denom = jnp.maximum(jnp.abs(qn + qn_intra), jnp.exp(-m_tot))
+        h = num / denom[..., None]                  # (b, nh, L, hd)
+        # end-of-chunk state
+        gL = g[..., -1:]                            # (b, nh, 1)
+        ML = jnp.maximum(m0, jnp.max(sj, axis=-1))
+        m1 = gL[..., 0] + ML
+        wC0 = jnp.exp(m0 - ML)   # = exp(m0 + g_L - m1)
+        wkj = jnp.exp(gL - g + lit - m1[..., None])  # (b, nh, L)
+        C1 = wC0[..., None, None] * C0 + jnp.einsum(
+            "bnt,bnth,bntv->bnhv", wkj, kt, vt)
+        n1 = wC0[..., None] * n0 + jnp.einsum("bnt,bnth->bnh", wkj, kt)
+        return {"C": C1, "n": n1, "m": m1}, h
+
+    state, hs = jax.lax.scan(chunk_body, state, (qc, kc, vc, lic, lfc))
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(b, s, nh, hd)
+    h = (h * og)[:, :s0]
+    return h.astype(x.dtype), state
+
+
+def apply_mlstm_block(p, x, cfg):
+    h, _ = mlstm_chunkwise(p, x, cfg)
+    return jnp.einsum("bsnh,nhd->bsd", h, p["wo"].astype(x.dtype))
+
+
+def apply_mlstm_block_step(p, x, cfg, state):
+    """Decode: x (b, 1, d)."""
+    q, k, v, li, lf, og = _mlstm_qkvg(p, x, cfg)
+    h, state = _mlstm_step_core(
+        q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+        v[:, 0].astype(jnp.float32), li[:, 0], lf[:, 0], state)
+    h = (h * og[:, 0]).astype(x.dtype)
+    return jnp.einsum("bnh,nhd->bd", h, p["wo"].astype(x.dtype))[:, None], state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm(key, cfg):
+    d, nh, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 3)
+    w = _winit(ks[0], (4, d, nh, hd), d)            # z, i, f, o preacts
+    r = _winit(ks[1], (4, nh, hd, hd), hd) * 0.5    # recurrent (block-diag/head)
+    b = jnp.zeros((4, nh, hd), jnp.float32).at[2].set(3.0)  # forget-bias +3
+    return {"w": w, "r": r, "b": b,
+            "wo": _winit(ks[2], (nh, hd, d), nh * hd)}
+
+
+def init_slstm_state(cfg, batch):
+    nh, hd = cfg.num_heads, cfg.head_dim
+    z = jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, nh, hd), -jnp.inf)}
+
+
+def _slstm_step_core(pre_x, r, state):
+    """pre_x: (b, 4, nh, hd) input preactivations (bias included)."""
+    h0, c0, n0, m0 = state["h"], state["c"], state["n"], state["m"]
+    pre = pre_x + jnp.einsum("bnh,gnhj->bgnj", h0, r)
+    za, ia, fa, oa = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    z = jnp.tanh(za)
+    m1 = jnp.maximum(fa + m0, ia)                   # exp-forget-gate variant
+    fp = jnp.exp(fa + m0 - m1)
+    ip = jnp.exp(ia - m1)
+    c1 = fp * c0 + ip * z
+    n1 = fp * n0 + ip
+    o = jax.nn.sigmoid(oa)
+    h1 = o * c1 / jnp.maximum(n1, jnp.exp(-m1))
+    return h1, {"h": h1, "c": c1, "n": n1, "m": m1}
+
+
+def slstm_scan(p, x, cfg, state=None):
+    """x: (b, s, d) -> ((b, s, nh, hd), state). Strictly sequential."""
+    b = x.shape[0]
+    state = state or init_slstm_state(cfg, b)
+    pre = jnp.einsum("bsd,gdnh->bsgnh", x.astype(jnp.float32), p["w"]) + p["b"]
+    r = p["r"]
+
+    def body(st, pre_t):
+        h, st = _slstm_step_core(pre_t, r, st)
+        return st, h
+
+    state, hs = jax.lax.scan(body, state, pre.transpose(1, 0, 2, 3, 4))
+    return hs.transpose(1, 0, 2, 3).astype(x.dtype), state
+
+
+def apply_slstm_block(p, x, cfg):
+    h, _ = slstm_scan(p, x, cfg)
+    return jnp.einsum("bsnh,nhd->bsd", h, p["wo"].astype(x.dtype))
+
+
+def apply_slstm_block_step(p, x, cfg, state):
+    pre = jnp.einsum("bd,gdnh->bgnh", x[:, 0].astype(jnp.float32), p["w"]) + p["b"]
+    h, state = _slstm_step_core(pre, p["r"], state)
+    out = jnp.einsum("bnh,nhd->bd", h.astype(x.dtype), p["wo"].astype(x.dtype))
+    return out[:, None], state

@@ -1,0 +1,1 @@
+from repro.pipeline.executor import PipelineExecutor, StepResult  # noqa: F401

@@ -1,0 +1,124 @@
+"""Split a full model into pipeline stages (Megatron-style layer ranges).
+
+``split_params`` regroups the PatternStack's stacked parameters into
+per-stage, per-layer params; ``merge_stage_grads`` restacks gradients into
+the original structure so the optimizer is pipeline-agnostic. Tied
+embeddings are replicated onto the first and last stage and their grads
+summed at merge (Megatron ties them with an all-reduce the same way).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.blocks import PatternStack, apply_layer
+from repro.models.layers import apply_norm, embed, unembed
+
+
+def layer_assignment(cfg: ModelConfig, p: int) -> List[List[int]]:
+    """Contiguous layer ranges per stage (uniform; remainder to late stages,
+    which hold fewer in-flight activations under 1F1B)."""
+    n = cfg.num_layers
+    base, extra = divmod(n, p)
+    sizes = [base + (1 if i >= p - extra else 0) for i in range(p)]
+    out, ℓ = [], 0
+    for s in sizes:
+        out.append(list(range(ℓ, ℓ + s)))
+        ℓ += s
+    return out
+
+
+def get_layer_params(params, cfg: ModelConfig, ℓ: int):
+    """Extract layer ℓ's params from the PatternStack structure."""
+    stack = PatternStack(cfg)
+    k = len(stack.pattern)
+    blk, j = divmod(ℓ, k)
+    if blk < stack.n_full:
+        return jax.tree.map(lambda a: a[blk], params["blocks"][f"pos{j}"])
+    return params["blocks"][f"rem{ℓ - stack.n_full * k}"]
+
+
+def split_params(params, cfg: ModelConfig, p: int) -> List[Dict[str, Any]]:
+    assign = layer_assignment(cfg, p)
+    stages = []
+    for i, layers in enumerate(assign):
+        sp: Dict[str, Any] = {
+            "layers": [get_layer_params(params, cfg, ℓ) for ℓ in layers]}
+        if i == 0:
+            sp["embed"] = params["embed"]
+        if i == p - 1:
+            sp["final_norm"] = params["final_norm"]
+            # unembed weights (tied table or separate matrix)
+            sp["unembed"] = params["embed"]
+        stages.append(sp)
+    return stages
+
+
+def merge_stage_grads(stage_grads: List[Dict[str, Any]], cfg: ModelConfig,
+                      p: int, params_template):
+    """Restack per-stage layer grads into full-model param structure."""
+    assign = layer_assignment(cfg, p)
+    stack = PatternStack(cfg)
+    k = len(stack.pattern)
+    # gather per-layer grads in global order
+    per_layer = {}
+    for sg, layers in zip(stage_grads, assign):
+        for local, ℓ in enumerate(layers):
+            per_layer[ℓ] = sg["layers"][local]
+    blocks: Dict[str, Any] = {}
+    for j in range(k):
+        rows = [per_layer[blk * k + j] for blk in range(stack.n_full)]
+        blocks[f"pos{j}"] = jax.tree.map(lambda *a: jnp.stack(a), *rows)
+    for i in range(len(stack.rem)):
+        blocks[f"rem{i}"] = per_layer[stack.n_full * k + i]
+    embed_grad = stage_grads[0]["embed"]
+    tail = stage_grads[-1]
+    embed_grad = jax.tree.map(jnp.add, embed_grad, tail["unembed"])
+    return {"embed": embed_grad, "blocks": blocks,
+            "final_norm": tail["final_norm"]}
+
+
+# ---------------------------------------------------------------------------
+# Stage forward functions
+# ---------------------------------------------------------------------------
+def make_stage_fn(cfg: ModelConfig, p: int, stage: int, remat: str = "none"):
+    """Returns f(stage_params, x_or_tokens, batch) -> activation or loss.
+
+    Stage 0 consumes batch tokens (embeds); the last stage returns the
+    scalar mean loss for the microbatch. MoE aux-loss is folded in.
+    """
+    assign = layer_assignment(cfg, p)
+    kinds = cfg.layer_kinds()
+    layers = assign[stage]
+    first, last = stage == 0, stage == p - 1
+
+    def fn(sp, carry, batch):
+        """carry = (activation, running_aux). Stage 0 builds it from tokens;
+        the last stage collapses it to the scalar microbatch loss."""
+        if first:
+            x = embed(sp["embed"], batch["tokens"], cfg)
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            x, aux = carry
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        for local, ℓ in enumerate(layers):
+            x, a = apply_layer(sp["layers"][local], x, cfg, kinds[ℓ],
+                               positions, remat=remat)
+            aux = aux + a
+        if not last:
+            return x, aux
+        x = apply_norm(sp["final_norm"], x)
+        logits = unembed(sp["unembed"], x, cfg)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        lbl = jnp.maximum(labels, 0)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, lbl[..., None], axis=-1)[..., 0]
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return loss + aux
+
+    return fn

@@ -1,0 +1,265 @@
+"""Logical sharding rules: param/batch/cache pytrees -> PartitionSpec trees.
+
+Production mesh axes (launch/mesh.py): ("data", "model") single-pod or
+("pod", "data", "model") multi-pod. Batch shards over pod+data; weight
+matrices shard their wide dimension over "model" (Megatron-style tensor
+parallelism — the paper's t axis); MoE experts shard over "model"
+(expert parallelism); KV caches shard batch over data and kv-heads over
+"model". GSPMD pads non-divisible dims (e.g. 40 heads on 16 devices).
+
+Leaf rules key off the parameter NAME (the convention set by the model
+init functions) and are padded with leading None for stacked-layer dims.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+M = "model"
+
+# name -> spec for the *trailing* dims of the leaf.
+_PARAM_RULES = {
+    # embeddings
+    "table": (M, None),          # (vocab, d)
+    "unembed": (None, M),        # (d, vocab)
+    # attention
+    "wq": (None, M, None),       # (d, heads, hd)
+    "wk": (None, M, None),
+    "wv": (None, M, None),
+    "wo": (M, None, None),       # (heads, hd, d) — also matches mlstm/slstm
+    "bq": (M, None),
+    "bk": (M, None),
+    "bv": (M, None),
+    # dense mlp (wi/wg: (d, f); wo handled by ndim fallback below)
+    "wi": (None, M),
+    "wg": (None, M),
+    # moe (experts lead): router replicated
+    "router": (None, None),
+    # recurrent (rglru)
+    "in_x": (None, M),
+    "in_g": (None, M),
+    "out": (M, None),
+    "wa": (None, M),
+    "wx": (None, M),
+    "ba": (M,),
+    "bx": (M,),
+    "lam": (M,),
+    "conv_w": (None, M),
+    "conv_b": (M,),
+    # xlstm
+    "wif": (None, M, None),      # (d, nh, 2)
+    "bif": (M, None),
+    "wog": (None, M, None),
+    "w": (None, None, M, None),  # slstm (4, d, nh, hd)
+    "r": (None, M, None, None),  # slstm (4, nh, hd, hd)
+    "b": (None, M, None),        # slstm (4, nh, hd)
+    # norms
+    "scale": (None,),
+    "bias": (None,),
+}
+
+# Experts-leading MoE weights override by ndim: (E, d, f)/(E, f, d)
+_MOE_3D = {"wi": (M, None, None), "wg": (M, None, None), "wo": (M, None, None)}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return entry.name
+    return ""
+
+
+def _in_moe(path) -> bool:
+    names = [str(e.key) for e in path if isinstance(e, jax.tree_util.DictKey)]
+    return "ffn" in names and "shared" not in names
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+# Relocations performed by legalize(); launchers surface these because
+# EXPERIMENTS.md §Perf HC-5 measured a silent head->head_dim relocation
+# costing 100x in prefill collectives (GSPMD replicates the s^2 work).
+RELOCATIONS: list = []
+
+
+def legalize(spec: P, shape, mesh, tag: str = "") -> P:
+    """Explicit jit in_shardings must divide evenly (GSPMD only pads
+    *propagated* shardings). For each sharded dim that doesn't divide,
+    relocate the axis to the next unsharded dim that does (e.g. 40 heads
+    on 16 model devices -> shard head_dim instead); else replicate it.
+    Every relocation is recorded in RELOCATIONS — on attention head dims
+    it is a measured 10-100x collective hazard (pick TP | num_heads!).
+    """
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for d, entry in enumerate(entries):
+        if entry is None:
+            continue
+        size = _axis_size(mesh, entry)
+        if shape[d] % size == 0:
+            continue
+        entries[d] = None
+        for d2 in range(len(shape) - 1, -1, -1):
+            if entries[d2] is None and shape[d2] % size == 0 and d2 != d:
+                entries[d2] = entry
+                RELOCATIONS.append((tag, tuple(shape), d, d2, entry))
+                break
+        else:
+            RELOCATIONS.append((tag, tuple(shape), d, None, entry))
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_spec(path, leaf, mesh=None, moe_axis: str = M) -> P:
+    name = _leaf_name(path)
+    base: Tuple = _PARAM_RULES.get(name, ())
+    trailing = leaf.ndim - _lead_pad(path)
+    if name in _MOE_3D and _in_moe(path) and trailing == 3:
+        # experts-leading (E, d, f)/(E, f, d). moe_axis="model" = expert
+        # parallel (activations all-to-all); moe_axis="data" = ZeRO-3
+        # style weight sharding (weights gathered per layer — §Perf
+        # lever for small-expert MoEs where weight bytes << token bytes).
+        base = tuple(moe_axis if e == M else e for e in _MOE_3D[name])
+    if name == "wo" and trailing == 2:
+        base = (M, None)  # dense mlp wo: (f, d)
+    pad = leaf.ndim - len(base)
+    if pad < 0:  # scalar-ish leaf, replicate
+        return P()
+    spec = P(*([None] * pad + list(base)))
+    if mesh is not None:
+        spec = legalize(spec, leaf.shape, mesh, tag=name)
+    return spec
+
+
+def _lead_pad(path) -> int:
+    """Stacked-layer leading dims: 1 if under blocks['pos*'] (scan stack)."""
+    for entry in path:
+        if isinstance(entry, jax.tree_util.DictKey) and str(entry.key).startswith("pos"):
+            return 1
+    return 0
+
+
+def param_specs(params, mesh=None, moe_axis: str = M) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: param_spec(p, l, mesh, moe_axis), params)
+
+
+def param_shardings(params, mesh, moe_axis: str = M) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh, moe_axis))
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache
+# ---------------------------------------------------------------------------
+def batch_axes(mesh) -> Tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_specs(batch, mesh) -> Any:
+    ba = batch_axes(mesh)
+
+    def spec(path, leaf):
+        return legalize(P(*([ba] + [None] * (leaf.ndim - 1))),
+                        leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def batch_shardings(batch, mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        batch_specs(batch, mesh))
+
+
+def maybe_constrain(x, *entries):
+    """with_sharding_constraint against the ambient abstract mesh; no-op
+    outside a mesh context or when dims don't divide (legalized)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    valid = []
+    for e in entries:
+        if e is None or (isinstance(e, str) and e in mesh.axis_names):
+            valid.append(e)
+        elif isinstance(e, (tuple, list)):
+            sub = tuple(a for a in e if a in mesh.axis_names)
+            valid.append(sub if sub else None)
+        else:
+            valid.append(None)
+    spec = legalize(P(*valid), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+_CACHE_RULES = {
+    "k": (None, None, M, None),     # (b, n, kv, hd)
+    "v": (None, None, M, None),
+    "pos": (None, None),            # (b, n)
+    "h": (None, M),                 # rglru state (b, w)
+    "conv": (None, None, M),        # (b, cw-1, w)
+    "C": (None, M, None, None),     # mlstm (b, nh, hd, hd)
+    "n": (None, M, None),           # (b, nh, hd)
+    "m": (None, M),                 # (b, nh)
+    "c": (None, M, None),           # slstm
+}
+_SLSTM_STATE = {"h": (None, M, None), "n": (None, M, None), "m": (None, M, None)}
+
+
+# strategy "seq": shard the KV cache's sequence dim over "model" instead
+# of kv-heads — flash-decoding-style split-KV (EXPERIMENTS.md §Perf
+# lever for the collective-bound decode combos, where few kv heads force
+# the legalizer onto head_dim and GSPMD into full rematerialization).
+_CACHE_RULES_SEQ = {
+    "k": (None, M, None, None),
+    "v": (None, M, None, None),
+    "pos": (None, M),
+}
+
+
+def cache_spec(path, leaf, mesh, strategy: str = "heads", cfg=None) -> P:
+    ba = batch_axes(mesh)
+    name = _leaf_name(path)
+    rules_tbl = dict(_CACHE_RULES)
+    if strategy == "auto":
+        # §Perf-measured policy (EXPERIMENTS.md HC-2): under GQA the kv
+        # broadcast across a sharded head/head_dim axis makes GSPMD fully
+        # rematerialize the cache (gemma2/granite: ~1000x collective
+        # blowup) -> split-KV (seq sharding). For MHA (qwen1.5-32b) the
+        # classic head/hd sharding wins on memory.
+        gqa = cfg is not None and cfg.num_heads != cfg.num_kv_heads
+        strategy = "seq" if gqa else "heads"
+    if strategy == "seq":
+        rules_tbl.update(_CACHE_RULES_SEQ)
+    base = rules_tbl.get(name, ())
+    # slstm h/n/m are (b, nh, hd): disambiguate by rank
+    if name in _SLSTM_STATE and leaf.ndim - _lead_pad(path) == 3:
+        base = _SLSTM_STATE[name]
+    pad = leaf.ndim - len(base)
+    if pad < 0:
+        return P()
+    spec = [None] * pad + list(base)
+    # batch dim is the first dim after any stack padding
+    spec[_lead_pad(path)] = ba if ba else None
+    return legalize(P(*spec), leaf.shape, mesh)
+
+
+def cache_specs(cache, mesh, strategy: str = "heads", cfg=None) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: cache_spec(p, l, mesh, strategy, cfg), cache)
+
+
+def cache_shardings(cache, mesh, strategy: str = "heads", cfg=None) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        cache_specs(cache, mesh, strategy, cfg))

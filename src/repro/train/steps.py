@@ -1,0 +1,87 @@
+"""train_step / prefill_step / serve_step factories with sharding.
+
+These are the functions the dry-run lowers on the production mesh for
+every (architecture x input shape): training shapes lower ``train_step``,
+prefill shapes lower ``prefill_step``, decode shapes lower ``serve_step``
+(ONE new token against a seq_len KV cache), per the assignment.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import model as M
+from repro.optim import adam
+from repro.sharding import rules
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None,
+                    donate: bool = True):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: M.loss_fn(p, batch, cfg, remat=tcfg.remat),
+            has_aux=True)(params)
+        params, opt_state, opt_metrics = adam.update(
+            params, grads, opt_state, tcfg)
+        metrics = dict(metrics, **opt_metrics, total=loss)
+        return params, opt_state, metrics
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+    def shardings(params, opt_state, batch):
+        ps = rules.param_shardings(params, mesh)
+        os_ = adam.AdamState(
+            step=jax.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            m=ps, v=ps)
+        bs = rules.batch_shardings(batch, mesh)
+        return ps, os_, bs
+
+    return step, shardings
+
+
+def make_loss_grad(cfg: ModelConfig, tcfg: TrainConfig):
+    """Bare loss+grad (no optimizer) — used by some benchmarks."""
+
+    def f(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: M.loss_fn(p, batch, cfg, remat=tcfg.remat),
+            has_aux=True)(params)
+        return loss, grads
+
+    return f
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """(params, batch, state) -> (logits_last, state)."""
+
+    def step(params, batch, state):
+        logits, state, _ = M.prefill(params, batch, cfg, state)
+        return logits, state
+
+    return step
+
+
+def make_serve_step(cfg: ModelConfig, sample: str = "greedy"):
+    """One decode step: (params, state, token, pos[, enc_states])
+    -> (next_token, logits, state)."""
+
+    def step(params, state, token, pos, enc_states=None):
+        logits, state = M.decode_step(params, token, pos, state, cfg,
+                                      enc_states=enc_states)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, logits, state
+
+    return step
+
+
+def init_all(cfg: ModelConfig, seed: int = 0):
+    params = M.init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = adam.init(params)
+    return params, opt_state

@@ -1,0 +1,47 @@
+"""BPipe planning: pairing, layout (paper Fig. 2), TPU hop distances."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bpipe as BP
+from repro.core import schedule as S
+
+
+@given(st.integers(2, 32))
+@settings(max_examples=40, deadline=None)
+def test_layout_pairs_adjacent(p):
+    plan = BP.plan(p, 4 * p)
+    layout = plan.stage_to_device
+    assert sorted(layout) == list(range(p))
+    hops = BP.hop_distance(plan)
+    assert all(h == 1 for h in hops.values()), hops
+    if p % 2 == 0:
+        assert BP.pairs_within_node(plan, 2)  # paper Fig.2, node size 2
+    if p == 16:
+        assert BP.pairs_within_node(plan, 8)  # paper's 2x8-GPU nodes
+
+
+@given(st.integers(2, 16))
+@settings(max_examples=30, deadline=None)
+def test_pairing_is_involution(p):
+    plan = BP.plan(p, 2 * p)
+    partner = plan.partner
+    for a, b in plan.pairs:
+        assert partner[a] == b and partner[b] == a
+        assert a + b == p - 1
+
+
+def test_plan_matches_schedule_evictions():
+    plan = BP.plan(8, 64)
+    assert plan.cap == S.bpipe_cap(8)
+    assert plan.evictions == tuple(S.num_evictions(8, 64, i) for i in range(8))
+
+
+def test_fig2_sixteen_way():
+    """Paper Fig. 2: 16-way PP on two 8-GPU nodes, pairs node-local."""
+    plan = BP.plan(16, 128)
+    assert BP.pairs_within_node(plan, 8)
+    # evictors are exactly stages 0..(p-cap-1+1)
+    for i, ne in enumerate(plan.evictions):
+        if min(16 - i, 128) > plan.cap:
+            assert ne > 0, i
+        else:
+            assert ne == 0, i

@@ -1,0 +1,102 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED
+variant of each family runs one forward + one train step on CPU with
+shape and finiteness assertions. Full configs are exercised only by the
+dry-run (ShapeDtypeStruct, no allocation)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, INPUT_SHAPES, get_config, list_configs, shape_applicable
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models import model as M
+from repro.train.steps import init_all, make_train_step
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.num_layers <= 2 or cfg.num_layers == len(cfg.block_pattern)
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    params, opt = init_all(cfg)
+    b, s = 2, 32
+    dc = DataConfig(batch=b, seq_len=s)
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, dc, 0).items()}
+    n_text = batch["tokens"].shape[1]
+
+    logits, aux = M.forward(params, batch, cfg)
+    assert logits.shape == (b, n_text, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    tcfg = TrainConfig(global_batch=b, micro_batch=b, seq_len=s,
+                       steps=5, warmup_steps=1)
+    step = make_train_step(cfg, tcfg, donate=False)
+    params2, opt2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b_))
+        for a, b_ in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert changed
+
+
+def test_registry_complete():
+    for a in ASSIGNED:
+        assert get_config(a).name == a
+    assert "gpt3-96b" in list_configs() and "llama-65b" in list_configs()
+    with pytest.raises(KeyError):
+        get_config("nope")
+
+
+def test_exact_assigned_dimensions():
+    """The public-pool table, verbatim."""
+    spec = {
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+    }
+    for arch, (l, d, h, kv, ff, v) in spec.items():
+        c = get_config(arch)
+        got_ff = c.moe.d_ff if c.moe else c.d_ff
+        assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+                got_ff, c.vocab_size) == (l, d, h, kv, ff, v), arch
+    assert get_config("llama4-scout-17b-a16e").moe.num_experts == 16
+    assert get_config("llama4-scout-17b-a16e").moe.top_k == 1
+    assert get_config("granite-moe-1b-a400m").moe.num_experts == 32
+    assert get_config("granite-moe-1b-a400m").moe.top_k == 8
+
+
+def test_long_context_applicability():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md skips)."""
+    long = INPUT_SHAPES["long_500k"]
+    runs = {a for a in ASSIGNED if shape_applicable(get_config(a), long)}
+    assert runs == {"recurrentgemma-2b", "xlstm-125m"}
+    assert shape_applicable(get_config("qwen1.5-0.5b-swa"), long)
+    for a in ASSIGNED:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(get_config(a), INPUT_SHAPES[s])
+
+
+def test_param_counts_plausible():
+    approx = {
+        "qwen3-14b": 14e9, "gemma2-9b": 9e9, "qwen1.5-32b": 32e9,
+        "qwen1.5-0.5b": 0.5e9, "xlstm-125m": 0.125e9,
+        "llama4-scout-17b-a16e": 100e9,  # total (not active) params
+        "granite-moe-1b-a400m": 1.3e9,
+    }
+    for arch, n in approx.items():
+        got = get_config(arch).param_count()
+        assert 0.45 * n < got < 2.2 * n, (arch, got, n)

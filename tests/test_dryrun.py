@@ -1,0 +1,60 @@
+"""Dry-run integration: one real combo lowers+compiles on the production
+mesh in a subprocess (512 fake devices), plus HLO-parsing unit tests."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_collective_bytes_parser():
+    from repro.launch.roofline import collective_bytes
+    hlo = """
+      %ag = bf16[8,128]{1,0} all-gather(%x), replica_groups={}
+      %ar.1 = f32[64]{0} all-reduce(%y), to_apply=%sum
+      %cp = (f32[2,4]{1,0}, f32[2,4]{1,0}) collective-permute-start(%z)
+      %junk = f32[2] add(%a, %b)
+    """
+    got = collective_bytes(hlo)
+    assert got["all-gather"] == 8 * 128 * 2
+    assert got["all-reduce"] == 64 * 4
+    assert got["collective-permute"] == 0  # tuple-result start not counted
+    assert got["all-to-all"] == 0
+
+
+def test_extrapolation():
+    from repro.launch.roofline import extrapolate
+    c1 = {"flops": 10.0, "bytes": 100.0}
+    c2 = {"flops": 16.0, "bytes": 130.0}
+    out = extrapolate(c1, c2, 10)
+    assert out["flops"] == pytest.approx(4 + 6 * 10)
+    assert out["bytes"] == pytest.approx(70 + 30 * 10)
+
+
+def test_roofline_terms():
+    from repro.launch.roofline import RooflineTerms
+    t = RooflineTerms(flops=197e12, bytes_hbm=819e9, bytes_collective=0.0,
+                      chips=256)
+    assert t.t_compute == pytest.approx(1.0)
+    assert t.t_memory == pytest.approx(1.0)
+    assert t.dominant in ("compute", "memory")
+    assert t.mfu(197e12 / 2) == pytest.approx(0.5)
+
+
+@pytest.mark.slow
+def test_dryrun_one_combo_subprocess(tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "xlstm-125m", "--shape", "decode_32k",
+         "--mesh", "single", "--no-roofline", "--force",
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=600, env=env, cwd=ROOT)
+    assert "OK   xlstm-125m decode_32k single" in r.stdout, (
+        r.stdout + r.stderr)
+    rec = json.load(open(tmp_path / "xlstm-125m__decode_32k__single.json"))
+    assert rec["full"]["t_compile_s"] > 0
+    assert rec["full"]["cost_raw"]["flops"] > 0

@@ -1,0 +1,127 @@
+"""Pipeline executor: BPipe/1F1B/GPipe numerics == non-pipelined reference,
+live stash accounting == the memory model's predictions."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import schedule as S
+from repro.models import model as M
+from repro.pipeline import PipelineExecutor
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _setup(arch="qwen1.5-0.5b", layers=4, b=8, s=16):
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg, num_layers=layers, dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(KEY, (b, s + 1), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    ref_loss, _ = M.loss_fn(params, batch, cfg)
+    ref_grads = jax.grad(lambda p: M.loss_fn(p, batch, cfg)[0])(params)
+    return cfg, params, batch, ref_loss, ref_grads
+
+
+@pytest.mark.parametrize("kind", ["gpipe", "1f1b", "bpipe"])
+def test_executor_matches_reference(kind):
+    cfg, params, batch, ref_loss, ref_grads = _setup()
+    ex = PipelineExecutor(cfg, p=4, kind=kind, micro_batch=2)
+    res = ex.step(params, batch)
+    assert abs(float(res.loss - ref_loss)) < 1e-5
+    for a, b in zip(jax.tree.leaves(res.grads), jax.tree.leaves(ref_grads)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-6, rtol=1e-4)
+
+
+def test_executor_hybrid_arch():
+    """The paper's technique on a non-dense family (RG-LRU + local attn)."""
+    cfg, params, batch, ref_loss, ref_grads = _setup(
+        "recurrentgemma-2b", layers=6, b=4, s=12)
+    ex = PipelineExecutor(cfg, p=3, kind="bpipe", micro_batch=1)
+    res = ex.step(params, batch)
+    assert abs(float(res.loss - ref_loss)) < 1e-5
+    for a, b in zip(jax.tree.leaves(res.grads), jax.tree.leaves(ref_grads)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-6, rtol=1e-3)
+
+
+def test_stash_peaks_match_schedule_model():
+    cfg, params, batch, *_ = _setup(b=8)
+    for kind in ("1f1b", "bpipe", "gpipe"):
+        ex = PipelineExecutor(cfg, p=4, kind=kind, micro_batch=1)
+        res = ex.step(params, batch)
+        want = S.peak_stash(kind, 4, 8)
+        # executor peak may be lower than the merged-trace bound but never
+        # above it; local-only peak for 1f1b is exact
+        for i in range(4):
+            assert res.stats.peak_local[i] <= want[i] + 1
+        if kind == "1f1b":
+            assert res.stats.peak_local == want
+        if kind == "bpipe":
+            assert max(res.stats.peak_local.values()) <= S.bpipe_cap(4)
+            assert res.stats.evictions == res.stats.loads > 0
+            assert res.stats.bytes_moved > 0
+        if kind != "bpipe":
+            assert res.stats.bytes_moved == 0
+
+
+def test_executor_moe_arch():
+    """MoE through the pipeline. The router load-balance aux is nonlinear
+    in batch composition, so per-microbatch aux differs from full-batch
+    aux by construction (same in Megatron); with aux weight 0 the
+    pipeline is exact, and with aux on it is carried and close."""
+    base = get_config("granite-moe-1b-a400m").reduced()
+    moe_exact = dataclasses.replace(
+        base.moe, capacity_factor=float(base.moe.num_experts),
+        router_aux_weight=0.0)
+    cfg = dataclasses.replace(base, num_layers=4, dtype="float32",
+                              moe=moe_exact)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(KEY, (4, 13), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    ref_loss, _ = M.loss_fn(params, batch, cfg)
+    ref_grads = jax.grad(lambda p: M.loss_fn(p, batch, cfg)[0])(params)
+    ex = PipelineExecutor(cfg, p=2, kind="bpipe", micro_batch=2)
+    res = ex.step(params, batch)
+    assert abs(float(res.loss - ref_loss)) < 1e-5
+    for a, b in zip(jax.tree.leaves(res.grads), jax.tree.leaves(ref_grads)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-3)
+    # aux carried through the pipe when enabled
+    cfg_aux = dataclasses.replace(cfg, moe=dataclasses.replace(
+        moe_exact, router_aux_weight=0.01))
+    res_aux = PipelineExecutor(cfg_aux, p=2, kind="bpipe",
+                               micro_batch=2).step(params, batch)
+    assert float(res_aux.loss) > float(res.loss)
+    # aux magnitude ~ n_layers x weight x E-ish switch loss
+    assert abs(float(res_aux.loss - res.loss)) < 0.5
+
+
+def test_uneven_layer_assignment():
+    from repro.pipeline.stage import layer_assignment
+    cfg = dataclasses.replace(get_config("qwen1.5-0.5b").reduced(),
+                              num_layers=7)
+    assign = layer_assignment(cfg, 3)
+    assert [len(a) for a in assign] == [2, 2, 3]
+    assert sum(assign, []) == list(range(7))
+
+
+def test_executor_trains():
+    """Three BPipe steps reduce the loss (optimizer integration)."""
+    from repro.configs.base import TrainConfig
+    from repro.optim import adam
+    cfg, params, batch, *_ = _setup(b=4, s=12)
+    tcfg = TrainConfig(global_batch=4, steps=10, warmup_steps=1,
+                       learning_rate=5e-3)
+    ex = PipelineExecutor(cfg, p=2, kind="bpipe", micro_batch=2)
+    opt = adam.init(params)
+    losses = []
+    for _ in range(3):
+        res = ex.step(params, batch)
+        params, opt, _ = adam.update(params, res.grads, opt, tcfg)
+        losses.append(float(res.loss))
+    assert losses[-1] < losses[0]

@@ -1,0 +1,88 @@
+"""Property tests (hypothesis) on the pipeline schedules — the system's
+core invariants."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schedule as S
+
+pm = st.tuples(st.integers(2, 24), st.integers(1, 6)).map(
+    lambda t: (t[0], t[0] * t[1]))  # m >= p keeps the steady state exercised
+
+
+@given(pm)
+@settings(max_examples=60, deadline=None)
+def test_1f1b_peak_is_p_minus_x(t):
+    p, m = t
+    peaks = S.peak_stash("1f1b", p, m)
+    for i in range(p):
+        assert peaks[i] == min(p - i, m)
+
+
+@given(pm)
+@settings(max_examples=60, deadline=None)
+def test_bpipe_cap_respected(t):
+    p, m = t
+    peaks = S.peak_stash("bpipe", p, m)
+    cap = S.bpipe_cap(p)
+    assert max(peaks.values()) <= cap
+    # and BPipe actually balances: spread is <= half the 1F1B spread
+    p1 = S.peak_stash("1f1b", p, m)
+    if p >= 4:
+        assert (max(peaks.values()) - min(peaks.values())
+                <= max(p1.values()) - min(p1.values()))
+
+
+@given(pm, st.sampled_from(["gpipe", "1f1b", "bpipe"]))
+@settings(max_examples=60, deadline=None)
+def test_streams_well_formed(t, kind):
+    p, m = t
+    streams = S.build(kind, p, m)
+    for i in range(p):
+        st_ = streams[i]
+        fs = [x.mb for x in st_ if x.op == S.F]
+        bs = [x.mb for x in st_ if x.op == S.B]
+        assert fs == list(range(m)) and bs == list(range(m))
+        held = set()
+        for x in st_:
+            if x.op == S.F:
+                assert x.mb not in held
+                held.add(x.mb)
+            elif x.op == S.EVICT:
+                assert x.mb in held
+                held.discard(x.mb)
+            elif x.op == S.LOAD:
+                assert x.mb not in held
+                held.add(x.mb)
+            else:
+                assert x.mb in held, (kind, p, m, i, x)
+                held.discard(x.mb)
+        assert not held
+
+
+@given(pm)
+@settings(max_examples=40, deadline=None)
+def test_non_bpipe_schedules_never_evict(t):
+    p, m = t
+    for kind in ("gpipe", "1f1b"):
+        for i in range(p):
+            assert all(x.op in (S.F, S.B) for x in S.build(kind, p, m)[i])
+
+
+@given(pm)
+@settings(max_examples=40, deadline=None)
+def test_eviction_counts_monotone_in_stage(t):
+    """Earlier stages hold more 1F1B stash => need >= as many evictions."""
+    p, m = t
+    ev = [S.num_evictions(p, m, i) for i in range(p)]
+    assert all(a >= b for a, b in zip(ev, ev[1:]))
+    # acceptor halves never evict
+    for i in range(p // 2 + (p % 2), p):
+        assert ev[i] == 0
+
+
+def test_gpipe_peak_is_m():
+    peaks = S.peak_stash("gpipe", 4, 12)
+    assert all(v == 12 for v in peaks.values())
+
+
+def test_cap_formula():
+    assert [S.bpipe_cap(p) for p in (2, 3, 4, 8, 16)] == [2, 3, 3, 5, 9]

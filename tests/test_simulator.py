@@ -1,0 +1,77 @@
+"""Discrete-event simulator vs the paper's closed forms."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import simulator as SIM
+from repro.core.estimator import bubble_factor
+from repro.core.notation import Notation
+
+
+@given(st.integers(2, 12), st.integers(1, 8), st.floats(0.5, 3.0))
+@settings(max_examples=40, deadline=None)
+def test_1f1b_matches_eq2_idealization(p, mm, tf):
+    m = p * mm
+    c = SIM.SimConfig(p=p, m=m, Tf=tf, Tb=2 * tf, kind="1f1b")
+    res = SIM.simulate(c)
+    assert res.makespan == pytest.approx(SIM.ideal_makespan(c), rel=1e-9)
+    # bubble fraction = (p-1)/(m+p-1)
+    assert res.bubble_fraction == pytest.approx((p - 1) / (m + p - 1), rel=1e-6)
+
+
+@given(st.integers(2, 12), st.integers(1, 6))
+@settings(max_examples=30, deadline=None)
+def test_bpipe_free_with_infinite_bandwidth(p, mm):
+    m = p * mm
+    base = SIM.simulate(SIM.SimConfig(p=p, m=m, Tf=1, Tb=2, kind="1f1b"))
+    bp = SIM.simulate(SIM.SimConfig(p=p, m=m, Tf=1, Tb=2, kind="bpipe"))
+    assert bp.makespan == pytest.approx(base.makespan)
+    assert bp.load_stall == 0.0
+
+
+def test_bpipe_overhead_with_slow_link():
+    base = SIM.simulate(SIM.SimConfig(p=8, m=64, Tf=1, Tb=2, kind="1f1b"))
+    slow = SIM.simulate(SIM.SimConfig(p=8, m=64, Tf=1, Tb=2, kind="bpipe",
+                                      evict_bytes=10e9, pair_bw=1e9))
+    assert slow.makespan > base.makespan
+    assert slow.load_stall > 0
+
+
+def test_bpipe_overlap_threshold():
+    """Transfers stay hidden while the pair link keeps up. Steady state
+    moves TWO stashes (evict+load) per F+B window, so the threshold is
+    t_move <= (Tf+Tb)/2 — a sharper bound than the paper's qualitative
+    'communication can overlap' claim."""
+    base = SIM.simulate(SIM.SimConfig(p=8, m=64, Tf=1, Tb=2, kind="1f1b"))
+    for t_move in (0.5, 1.0, 1.4):
+        r = SIM.simulate(SIM.SimConfig(p=8, m=64, Tf=1, Tb=2, kind="bpipe",
+                                       evict_bytes=t_move, pair_bw=1.0))
+        assert r.makespan == pytest.approx(base.makespan), t_move
+    # past the threshold the link saturates and backwards stall
+    r = SIM.simulate(SIM.SimConfig(p=8, m=64, Tf=1, Tb=2, kind="bpipe",
+                                   evict_bytes=2.9, pair_bw=1.0))
+    assert r.makespan > base.makespan
+
+
+def test_gpipe_same_time_different_memory():
+    g = SIM.simulate(SIM.SimConfig(p=4, m=16, Tf=1, Tb=2, kind="gpipe"))
+    f = SIM.simulate(SIM.SimConfig(p=4, m=16, Tf=1, Tb=2, kind="1f1b"))
+    assert g.makespan == pytest.approx(f.makespan)
+
+
+def test_bubble_factor_matches_sim():
+    n = Notation(a=8, b=2, h=512, l=8, s=128, v=1000, B=32, p=4, t=1)
+    c = SIM.SimConfig(p=n.p, m=n.num_micro, Tf=1, Tb=2, kind="1f1b")
+    res = SIM.simulate(c)
+    ideal_compute = n.num_micro * (c.Tf + c.Tb)
+    assert res.makespan / ideal_compute == pytest.approx(bubble_factor(n))
+
+
+def test_mfu_from_sim():
+    c = SIM.SimConfig(p=8, m=128, Tf=1.0, Tb=2.0, kind="1f1b")
+    res = SIM.simulate(c)
+    # if model_flops == busy_time * peak * p * t, MFU == compute efficiency
+    P, t = 100.0, 1
+    model_flops = 128 * 3.0 * 8 * P  # m microbatches x (Tf+Tb) x p stages x P
+    mfu = SIM.mfu_from_sim(res, model_flops, 8, t, P)
+    assert mfu == pytest.approx(128 * 3 / res.makespan, rel=1e-6)
+    assert mfu == pytest.approx(1 - res.bubble_fraction, rel=1e-6)
