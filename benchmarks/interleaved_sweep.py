@@ -1,0 +1,54 @@
+"""Interleaved-vs-plain schedule sweep: the bubble/memory trade-off the
+beyond-paper interleaved kinds buy, and what BPipe balancing claws back.
+
+For each (p, m, v): simulated bubble fraction and makespan for 1F1B,
+interleaved 1F1B, and interleaved BPipe (infinite pair bandwidth plus one
+finite-bandwidth arm), and peak stash in layer-equivalents (stash units x
+1/v layers) with the bpipe_interleaved cap.
+
+Columns: p, m, v, kind, makespan, bubble, peak_units, peak_layer_equiv,
+cap_units, load_stall.
+"""
+from __future__ import annotations
+
+from repro.core import schedule as S
+from repro.core import simulator as SIM
+
+GRID = [(4, 16), (8, 32), (16, 64)]
+VS = (2, 4)
+
+
+def _row(kind, p, m, v, t_move_rel=0.0):
+    cfg = SIM.SimConfig(p=p, m=m, Tf=1.0, Tb=2.0, kind=kind, v=v,
+                        evict_bytes=t_move_rel, pair_bw=1.0 if t_move_rel else float("inf"))
+    res = SIM.simulate(cfg)
+    peaks = S.peak_stash(kind, p, m, v)
+    units = max(peaks.values())
+    layer_eq = units / (v if kind in S.INTERLEAVED else 1)
+    cap = S.schedule_cap(kind, p, v)
+    return (kind, res.makespan, res.bubble_fraction, units, layer_eq,
+            cap if cap is not None else "-", res.load_stall)
+
+
+def main(print_csv=True):
+    rows = []
+    for p, m in GRID:
+        cases = [("1f1b", 1, 0.0), ("bpipe", 1, 0.0)]
+        for v in VS:
+            cases += [("1f1b_interleaved", v, 0.0),
+                      ("bpipe_interleaved", v, 0.0),
+                      ("bpipe_interleaved", v, 1.0)]
+        for kind, v, tm in cases:
+            kind_, mk, bub, units, leq, cap, stall = _row(kind, p, m, v, tm)
+            rows.append((p, m, v, kind_, mk, bub, units, leq, cap, stall))
+            if print_csv:
+                arm = f"{kind_}+slowlink" if tm else kind_
+                print(f"interleaved_sweep,p={p},m={m},v={v},{arm},"
+                      f"makespan={mk:.1f},bubble={bub:.4f},"
+                      f"peak_units={units},layer_equiv={leq:.1f},"
+                      f"cap={cap},stall={stall:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@ Prints ``name,...`` CSV rows:
   table3             paper Table 3 (MFU, all 10 experiments, +TPU variant)
   table5             paper §4 estimation validation (eq. 4 pairs)
   memory_balance     paper Fig. 1 / A100 fit analysis (1F1B vs BPipe)
+  interleaved_sweep  beyond-paper: interleaved 1F1B/BPipe bubble-memory
   estimator_accuracy eq.4 vs discrete-event simulator across a grid
   kernel_bench       Pallas kernels + §3.2 fusion-count analysis
   roofline           per-(arch x shape) roofline terms from the dry-run
@@ -17,11 +18,12 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (estimator_accuracy, kernel_bench, memory_balance,
-                            roofline_table, table3, table5)
+    from benchmarks import (estimator_accuracy, interleaved_sweep,
+                            kernel_bench, memory_balance, roofline_table,
+                            table3, table5)
     ok = True
-    for mod in (table3, table5, memory_balance, estimator_accuracy,
-                kernel_bench, roofline_table):
+    for mod in (table3, table5, memory_balance, interleaved_sweep,
+                estimator_accuracy, kernel_bench, roofline_table):
         try:
             mod.main()
         except Exception:  # noqa: BLE001

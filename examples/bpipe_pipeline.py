@@ -1,12 +1,13 @@
 """BPipe in action: train a model under GPipe / 1F1B / BPipe pipeline
-schedules and print the per-stage activation-stash timeline — the paper's
-Fig. 1, live.
+schedules — plain and interleaved (v virtual chunks per stage) — and
+print the per-stage activation-stash peaks: the paper's Fig. 1, live.
 
-    PYTHONPATH=src python examples/bpipe_pipeline.py [--stages 4]
+    PYTHONPATH=src python examples/bpipe_pipeline.py [--stages 4] [--v 2]
 
-All three schedules produce bit-comparable losses (same math, different
-memory); the printed peaks show 1F1B's p-x imbalance and BPipe's
-ceil((p+2)/2) cap.
+All schedules produce bit-comparable losses (same math, different
+memory); the printed peaks show 1F1B's p-x imbalance, BPipe's
+ceil((p+2)/2) cap, interleaving's stash growth, and the interleaved
+BPipe cap clawing it back.
 """
 import argparse
 import dataclasses
@@ -32,20 +33,29 @@ def main():
     ap.add_argument("--stages", type=int, default=4)
     ap.add_argument("--micro", type=int, default=1)
     ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--v", type=int, default=2,
+                    help="virtual chunks per stage for interleaved kinds")
     args = ap.parse_args()
     p = args.stages
 
     cfg = dataclasses.replace(get_config("qwen1.5-0.5b").reduced(),
-                              num_layers=2 * p, dtype="float32")
+                              num_layers=max(2, args.v) * p, dtype="float32")
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     dc = DataConfig(batch=8, seq_len=32)
     tcfg = TrainConfig(global_batch=8, steps=args.steps, warmup_steps=1,
                        learning_rate=1e-3)
 
-    print(f"pipeline: p={p}, m={8 // args.micro} microbatches, "
-          f"BPipe cap = ceil((p+2)/2) = {S.bpipe_cap(p)}")
-    for kind in ("gpipe", "1f1b", "bpipe"):
-        ex = PipelineExecutor(cfg, p=p, kind=kind, micro_batch=args.micro)
+    m = 8 // args.micro
+    print(f"pipeline: p={p}, m={m} microbatches, "
+          f"BPipe cap = ceil((p+2)/2) = {S.bpipe_cap(p)}, "
+          f"interleaved (v={args.v}) cap = {S.bpipe_interleaved_cap(p, args.v)}")
+    kinds = ["gpipe", "1f1b", "bpipe"]
+    # interleaved streams need m to be a multiple of p and v >= 2
+    if m % p == 0 and args.v >= 2:
+        kinds += ["1f1b_interleaved", "bpipe_interleaved"]
+    for kind in kinds:
+        ex = PipelineExecutor(cfg, p=p, kind=kind, micro_batch=args.micro,
+                              v=args.v)
         params_k, opt = params, adam.init(params)
         losses = []
         stats = None

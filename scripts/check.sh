@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Offline-safe repo check: byte-compile everything, then run tier-1.
+#
+#   scripts/check.sh            # full tier-1 (includes slow tests)
+#   scripts/check.sh -m 'not slow'   # extra pytest args pass through
+#
+# Needs no network and no PYTHONPATH fiddling (pyproject sets
+# pythonpath=["src"]); hypothesis is optional (tests/conftest.py falls
+# back to the deterministic stub in tests/_hypothesis_stub.py).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m compileall -q src benchmarks examples tests
+python -m pytest -q "$@"

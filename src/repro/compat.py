@@ -1,0 +1,69 @@
+"""Version shims for the JAX APIs this repo uses.
+
+The codebase targets the current JAX surface (``jax.shard_map``,
+``jax.set_mesh``, ``jax.sharding.AxisType``, ``jax.lax.pvary``,
+``pallas.tpu.CompilerParams``); this module resolves each name against the
+installed JAX and falls back to the pre-rename equivalent so the same
+source runs on 0.4.x containers. Import the shims, never the raw names.
+"""
+from __future__ import annotations
+
+import jax
+
+# --- shard_map: top-level since jax 0.6, experimental before ---------------
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def pvary(x, axis_names):
+    """jax.lax.pvary (explicit replication-varying cast). Older JAX tracks
+    replication inside shard_map itself (check_rep), so identity is the
+    correct fallback."""
+    fn = getattr(jax.lax, "pvary", None)
+    if fn is not None:
+        return fn(x, axis_names)
+    return x
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types when the installed JAX has them."""
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):
+        pass
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes)
+    from jax.experimental import mesh_utils
+    return jax.sharding.Mesh(mesh_utils.create_device_mesh(shape), axes)
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` for PartitionSpec resolution.
+    Falls back to the Mesh object itself, which is a context manager
+    entering the legacy resource environment on older JAX."""
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    return mesh
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict. Older JAX returns a
+    one-element list of per-computation dicts; newer returns the dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def tpu_compiler_params(**kwargs):
+    """pallas.tpu CompilerParams across the TPUCompilerParams rename."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

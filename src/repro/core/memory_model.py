@@ -41,10 +41,12 @@ def act_bytes_per_layer(n: Notation, attention: str) -> float:
     return base
 
 
-def act_bytes_per_stage(n: Notation, attention: str) -> float:
-    """One microbatch's stash for one pipeline stage (l/p layers) +
-    the boundary input activation (2sbh/t)."""
-    layers = n.l / n.p
+def act_bytes_per_stage(n: Notation, attention: str, v: int = 1) -> float:
+    """One stash unit's bytes for one (virtual) stage: l/(p*v) layers +
+    the boundary input activation (2sbh/t). v > 1 models interleaved
+    schedules, whose units each hold 1/v of the device's layers — more
+    units in flight, each proportionally smaller."""
+    layers = n.l / (n.p * v)
     return layers * act_bytes_per_layer(n, attention) + 2.0 * n.s * n.b * n.h / n.t
 
 
@@ -71,11 +73,16 @@ class StageMemory:
 
 
 def per_stage_memory(n: Notation, attention: str, kind: str,
-                     cfg: ModelConfig = None) -> List[StageMemory]:
-    """Peak memory per pipeline stage under schedule ``kind``."""
+                     cfg: ModelConfig = None, v: int = 1) -> List[StageMemory]:
+    """Peak memory per pipeline stage under schedule ``kind``. For
+    interleaved kinds pass v >= 2: stash-unit counts come from the
+    v-chunk streams and each unit is byte-weighted at 1/v of the
+    device's layers."""
+    if kind in sched.INTERLEAVED:
+        assert v >= 2, (kind, v)
     m = n.num_micro
-    peaks = sched.peak_stash(kind, n.p, m)
-    per_mb = act_bytes_per_stage(n, attention)
+    peaks = sched.peak_stash(kind, n.p, m, v)
+    per_mb = act_bytes_per_stage(n, attention, v if kind in sched.INTERLEAVED else 1)
     pb = param_bytes_per_stage(n, cfg)
     out = []
     for i in range(n.p):
@@ -86,18 +93,20 @@ def per_stage_memory(n: Notation, attention: str, kind: str,
 
 
 def max_stage_bytes(n: Notation, attention: str, kind: str,
-                    cfg: ModelConfig = None) -> float:
-    return max(s.total for s in per_stage_memory(n, attention, kind, cfg))
+                    cfg: ModelConfig = None, v: int = 1) -> float:
+    return max(s.total for s in per_stage_memory(n, attention, kind, cfg, v))
 
 
 def fits(n: Notation, attention: str, kind: str, device_bytes: float,
-         cfg: ModelConfig = None, workspace: float = 4 * 1024**3) -> bool:
+         cfg: ModelConfig = None, workspace: float = 4 * 1024**3,
+         v: int = 1) -> bool:
     """Does every stage fit in device memory (leaving CUDA/XLA workspace)?"""
-    return max_stage_bytes(n, attention, kind, cfg) + workspace <= device_bytes
+    return max_stage_bytes(n, attention, kind, cfg, v) + workspace <= device_bytes
 
 
 def max_micro_batch(n: Notation, attention: str, kind: str,
-                    device_bytes: float, cfg: ModelConfig = None) -> int:
+                    device_bytes: float, cfg: ModelConfig = None,
+                    v: int = 1) -> int:
     """Largest b (power of two, dividing B) that fits — the quantity BPipe
     unlocks (paper §4: 'we primarily use the reduced device memory to
     increase the micro batch size')."""
@@ -105,15 +114,22 @@ def max_micro_batch(n: Notation, attention: str, kind: str,
     b = 1
     while b <= n.B:
         if n.B % b == 0:
-            if fits(n.replace(b=b), attention, kind, device_bytes, cfg):
+            cand = n.replace(b=b)
+            # interleaved streams only exist for m % p == 0 — such a b is
+            # ineligible, not an OOM
+            if kind in sched.INTERLEAVED and cand.num_micro % cand.p != 0:
+                b *= 2
+                continue
+            if fits(cand, attention, kind, device_bytes, cfg, v=v):
                 best = b
         b *= 2
     return best
 
 
-def eviction_bytes(n: Notation, attention: str) -> float:
-    """Bytes moved per EVICT/LOAD (one microbatch's stage stash)."""
-    return act_bytes_per_stage(n, attention)
+def eviction_bytes(n: Notation, attention: str, v: int = 1) -> float:
+    """Bytes moved per EVICT/LOAD (one stash unit: a microbatch's stage
+    stash, or 1/v of it for interleaved kinds)."""
+    return act_bytes_per_stage(n, attention, v)
 
 
 def balance_report(n: Notation, attention: str) -> Dict[str, List[float]]:

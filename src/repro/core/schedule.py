@@ -177,11 +177,38 @@ def num_evictions(p: int, m: int, stage: int) -> int:
     return sum(1 for ins in bpipe(p, m, stage) if ins.op == EVICT)
 
 
-SCHEDULES = {"gpipe": gpipe, "1f1b": one_f_one_b, "bpipe": bpipe}
+SCHEDULES = {
+    "gpipe": gpipe,
+    "1f1b": one_f_one_b,
+    "bpipe": bpipe,
+    "1f1b_interleaved": one_f_one_b_interleaved,
+    "bpipe_interleaved": bpipe_interleaved,
+}
+
+# Kinds whose streams carry virtual-chunk instructions; ``build`` threads
+# the chunks-per-device count v to these (others ignore it).
+INTERLEAVED = frozenset({"1f1b_interleaved", "bpipe_interleaved"})
 
 
-def build(kind: str, p: int, m: int) -> Dict[int, Stream]:
+def virtual_stage(stage: int, chunk: int, p: int) -> int:
+    """Model-order index of device ``stage``'s chunk ``chunk``: chunk c on
+    device s hosts the layer slice of virtual stage c*p + s."""
+    return chunk * p + stage
+
+
+def schedule_cap(kind: str, p: int, v: int = 2) -> int | None:
+    """The schedule's per-device stash bound, or None if unbounded."""
+    if kind == "bpipe":
+        return bpipe_cap(p)
+    if kind == "bpipe_interleaved":
+        return bpipe_interleaved_cap(p, v)
+    return None
+
+
+def build(kind: str, p: int, m: int, v: int = 2) -> Dict[int, Stream]:
     fn = SCHEDULES[kind]
+    if kind in INTERLEAVED:
+        return {i: fn(p, m, i, v) for i in range(p)}
     return {i: fn(p, m, i) for i in range(p)}
 
 
@@ -227,8 +254,11 @@ def stash_trace(streams: Dict[int, Stream], p: int) -> Dict[int, List[int]]:
     return traces
 
 
-def peak_stash(kind: str, p: int, m: int) -> Dict[int, int]:
-    """Peak per-stage stash count (local + accepted foreign)."""
-    streams = build(kind, p, m)
+def peak_stash(kind: str, p: int, m: int, v: int = 2) -> Dict[int, int]:
+    """Peak per-stage stash count (local + accepted foreign). Units are
+    (mb, chunk) — for interleaved kinds each unit holds 1/v of the layers,
+    so byte-weighting is the memory model's job (see
+    ``memory_model.act_bytes_per_stage``)."""
+    streams = build(kind, p, m, v)
     traces = stash_trace(streams, p)
     return {i: (max(t) if t else 0) for i, t in traces.items()}

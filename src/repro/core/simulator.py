@@ -1,4 +1,5 @@
-"""Discrete-event simulator of pipeline schedules (GPipe / 1F1B / BPipe).
+"""Discrete-event simulator of pipeline schedules (GPipe / 1F1B / BPipe,
+plain and interleaved).
 
 Validates the paper's closed-form estimates against explicit timelines and
 quantifies what the paper *ignores* (its §4: "We also temporarily ignore
@@ -6,11 +7,21 @@ the overhead introduced by the BPipe technique"): eviction/load traffic
 that fails to overlap shows up here as real makespan.
 
 Model:
-  * per-stage compute: Tf(b) forward, Tb(b) backward per microbatch,
-  * p2p boundary transfer between adjacent stages: t_p2p (can be 0),
+  * per-stage compute: Tf(b) forward, Tb(b) backward per microbatch; for
+    interleaved kinds each of the v chunks does 1/v of the work, so a
+    chunk's F costs Tf/v and its B costs Tb/v,
+  * p2p boundary transfer between adjacent *virtual* stages: t_p2p
+    (charged whenever the producing virtual stage lives on a different
+    device, which for p > 1 is every hop — including the device p-1 ->
+    device 0 wraparound between chunks),
   * EVICT/LOAD: async copies on the evictor<->acceptor link
-    (bytes / pair_bw * hops); serialized per link; LOAD(mb) must finish
-    before B(mb) starts.
+    (bytes / pair_bw * hops); serialized per link; LOAD(mb, chunk) must
+    finish before B(mb, chunk) starts.
+
+All bookkeeping is keyed (stage, mb, chunk): F of chunk c at virtual
+stage vs = c*p + s depends on virtual stage vs-1 — which may be a chunk
+on the same device — and B of vs depends on vs+1, so interleaved and
+BPipe makespans are directly comparable.
 """
 from __future__ import annotations
 
@@ -25,13 +36,14 @@ from repro.core.schedule import B, EVICT, F, LOAD
 class SimConfig:
     p: int
     m: int                      # microbatches
-    Tf: float                   # forward time per microbatch per stage
+    Tf: float                   # forward time per microbatch per device
     Tb: float                   # backward time (typically 2*Tf)
     t_p2p: float = 0.0          # stage-boundary activation transfer
     evict_bytes: float = 0.0    # bytes per EVICT/LOAD
     pair_bw: float = float("inf")
     pair_hops: int = 1
     kind: str = "1f1b"
+    v: int = 2                  # chunks per device (interleaved kinds only)
 
 
 @dataclasses.dataclass
@@ -39,7 +51,7 @@ class SimResult:
     makespan: float
     busy: List[float]           # per-stage compute-busy time
     load_stall: float           # total time backwards waited on LOADs
-    timeline: Dict[int, List]   # (op, mb, start, end) per stage
+    timeline: Dict[int, List]   # (op, mb, chunk, start, end) per stage
 
     @property
     def bubble_fraction(self) -> float:
@@ -48,72 +60,91 @@ class SimResult:
 
 
 def simulate(cfg: SimConfig) -> SimResult:
-    streams = sched.build(cfg.kind, cfg.p, cfg.m)
+    p = cfg.p
+    v = cfg.v if cfg.kind in sched.INTERLEAVED else 1
+    nv = p * v
+    # One full microbatch of F work per device is Tf regardless of v:
+    # each chunk holds 1/v of the device's layers.
+    tf, tb = cfg.Tf / v, cfg.Tb / v
+    streams = sched.build(cfg.kind, p, cfg.m, v)
     partner = {}
-    for a, b_ in sched.bpipe_pairs(cfg.p):
+    for a, b_ in sched.bpipe_pairs(p):
         partner[a] = b_
         partner[b_] = a
     t_move = (cfg.evict_bytes / cfg.pair_bw) * cfg.pair_hops \
         if cfg.evict_bytes else 0.0
 
-    idx = {i: 0 for i in range(cfg.p)}          # next instruction pointer
-    t_stage = {i: 0.0 for i in range(cfg.p)}    # stage compute frontier
-    f_done: Dict[tuple, float] = {}             # (stage, mb) -> fwd end
+    idx = {i: 0 for i in range(p)}          # next instruction pointer
+    t_stage = {i: 0.0 for i in range(p)}    # stage compute frontier
+    f_done: Dict[tuple, float] = {}         # (stage, mb, chunk) -> fwd end
     b_done: Dict[tuple, float] = {}
-    evict_end: Dict[tuple, float] = {}          # (stage, mb) -> EVICT end
+    evict_end: Dict[tuple, float] = {}      # (stage, mb, chunk) -> EVICT end
     load_end: Dict[tuple, float] = {}
-    link_free: Dict[tuple, float] = {}          # pair link serialization
-    busy = {i: 0.0 for i in range(cfg.p)}
+    link_free: Dict[tuple, float] = {}      # pair link serialization
+    busy = {i: 0.0 for i in range(p)}
     stall = 0.0
-    timeline: Dict[int, List] = {i: [] for i in range(cfg.p)}
+    timeline: Dict[int, List] = {i: [] for i in range(p)}
 
     remaining = sum(len(s) for s in streams.values())
     while remaining:
         progressed = False
-        for i in range(cfg.p):
+        for i in range(p):
             while idx[i] < len(streams[i]):
                 ins = streams[i][idx[i]]
+                key = (i, ins.mb, ins.chunk)
+                vs = sched.virtual_stage(i, ins.chunk, p)
                 if ins.op == F:
-                    dep = 0.0 if i == 0 else f_done.get((i - 1, ins.mb))
-                    if dep is None:
-                        break
-                    start_t = max(t_stage[i], dep + cfg.t_p2p)
-                    end_t = start_t + cfg.Tf
-                    f_done[(i, ins.mb)] = end_t
-                    busy[i] += cfg.Tf
+                    if vs == 0:
+                        dep = 0.0
+                    else:
+                        pi, pc = (vs - 1) % p, (vs - 1) // p
+                        dep = f_done.get((pi, ins.mb, pc))
+                        if dep is None:
+                            break
+                    hop = cfg.t_p2p if (vs > 0 and (vs - 1) % p != i) else 0.0
+                    start_t = max(t_stage[i], dep + hop)
+                    end_t = start_t + tf
+                    f_done[key] = end_t
+                    busy[i] += tf
                     t_stage[i] = end_t
                 elif ins.op == B:
-                    dep = (f_done.get((i, ins.mb)) if i == cfg.p - 1
-                           else b_done.get((i + 1, ins.mb)))
+                    if vs == nv - 1:
+                        dep = f_done.get(key)
+                        hop = 0.0
+                    else:
+                        ni, nc = (vs + 1) % p, (vs + 1) // p
+                        dep = b_done.get((ni, ins.mb, nc))
+                        hop = cfg.t_p2p if ni != i else 0.0
                     if dep is None:
                         break
-                    start_t = max(t_stage[i], dep + cfg.t_p2p)
-                    le = load_end.get((i, ins.mb))
+                    start_t = max(t_stage[i], dep + hop)
+                    le = load_end.get(key)
                     if le is not None and le > start_t:
                         stall += le - start_t
                         start_t = le
-                    end_t = start_t + cfg.Tb
-                    b_done[(i, ins.mb)] = end_t
-                    busy[i] += cfg.Tb
+                    end_t = start_t + tb
+                    b_done[key] = end_t
+                    busy[i] += tb
                     t_stage[i] = end_t
                 elif ins.op == EVICT:
-                    # async: starts when F(mb) finished and the link frees
+                    # async: starts when F(mb, chunk) finished and the link
+                    # frees
                     pair = (min(i, partner[i]), max(i, partner[i]))
-                    start_t = max(f_done[(i, ins.mb)], link_free.get(pair, 0.0))
+                    start_t = max(f_done[key], link_free.get(pair, 0.0))
                     end_t = start_t + t_move
-                    evict_end[(i, ins.mb)] = end_t
+                    evict_end[key] = end_t
                     link_free[pair] = end_t
                 else:  # LOAD
                     # async prefetch, issued one F+B slot ahead of the
                     # backward it feeds (overlaps that compute window)
                     pair = (min(i, partner[i]), max(i, partner[i]))
-                    issue = max(0.0, t_stage[i] - cfg.Tf - cfg.Tb)
-                    start_t = max(issue, evict_end[(i, ins.mb)],
+                    issue = max(0.0, t_stage[i] - tf - tb)
+                    start_t = max(issue, evict_end[key],
                                   link_free.get(pair, 0.0))
                     end_t = start_t + t_move
-                    load_end[(i, ins.mb)] = end_t
+                    load_end[key] = end_t
                     link_free[pair] = end_t
-                timeline[i].append((ins.op, ins.mb, start_t, end_t))
+                timeline[i].append((ins.op, ins.mb, ins.chunk, start_t, end_t))
                 idx[i] += 1
                 remaining -= 1
                 progressed = True
@@ -122,7 +153,7 @@ def simulate(cfg: SimConfig) -> SimResult:
     makespan = max(max(t_stage.values()),
                    max(b_done.values(), default=0.0))
     return SimResult(makespan=makespan,
-                     busy=[busy[i] for i in range(cfg.p)],
+                     busy=[busy[i] for i in range(p)],
                      load_stall=stall, timeline=timeline)
 
 
@@ -135,3 +166,9 @@ def mfu_from_sim(res: SimResult, model_flops: float, p: int, t: int,
 def ideal_makespan(cfg: SimConfig) -> float:
     """The paper's eq-2 idealization: (m + p - 1) * (Tf + Tb)."""
     return (cfg.m + cfg.p - 1) * (cfg.Tf + cfg.Tb)
+
+
+def interleaved_ideal_makespan(cfg: SimConfig) -> float:
+    """Megatron interleaved idealization: the pipeline ramp shrinks to
+    (p - 1)/v flush units, so makespan ~= (m + (p - 1)/v)(Tf + Tb)."""
+    return (cfg.m + (cfg.p - 1) / cfg.v) * (cfg.Tf + cfg.Tb)

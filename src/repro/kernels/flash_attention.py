@@ -23,6 +23,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -0.7 * float(np.finfo(np.float32).max)
 
 
@@ -154,7 +156,7 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=0, softcap=0.0,
             pltpu.VMEM((block_q, m), jnp.float32),
             pltpu.VMEM((block_q, m, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
@@ -351,7 +353,7 @@ def flash_attention_bwd(q, k, v, out, lse, dout, *, causal=True, window=0,
                                lambda bb, g, qi, ki: (bb, qi, g, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, sq_p, nkv, m, hd), q.dtype),
         scratch_shapes=[pltpu.VMEM((block_q, m, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
@@ -387,7 +389,7 @@ def flash_attention_bwd(q, k, v, out, lse, dout, *, causal=True, window=0,
         ],
         scratch_shapes=[pltpu.VMEM((block_k, hd), jnp.float32),
                         pltpu.VMEM((block_k, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

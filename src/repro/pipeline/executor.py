@@ -1,24 +1,35 @@
 """Executable pipeline runtime: a schedule interpreter with true 1F1B /
-BPipe activation-stash semantics.
+BPipe activation-stash semantics, chunk-aware for interleaved schedules.
 
 This is the Megatron-equivalent layer of the reproduction: schedules from
 ``core.schedule`` are interpreted instruction-by-instruction; each F runs
-``jax.vjp`` on its stage (so the stash — the vjp residuals — is *really*
-held until the matching B), EVICT/LOAD move stash entries between the
-evictor's and acceptor's stores (on one host this is bookkeeping plus the
-byte accounting from ``core.memory_model``; on a multi-device host it
+``jax.vjp`` on its (virtual) stage (so the stash — the vjp residuals — is
+*really* held until the matching B), EVICT/LOAD move stash entries between
+the evictor's and acceptor's stores (on one host this is bookkeeping plus
+the byte accounting from ``core.memory_model``; on a multi-device host it
 would be a device_put), and every B consumes its stash and propagates the
 cotangent upstream.
 
+Interleaved kinds give each device v model chunks: chunk c on device s is
+virtual stage ``c*p + s``; activations flow virtual stage vs -> vs+1 (the
+hop from device p-1 back to device 0 crosses chunks), and every stash /
+routing key is (stage, mb, chunk), so the same interpreter executes plain
+and interleaved streams.
+
+Compilation contract (tested): stage fns are built and jitted once in
+``__init__`` and the microbatch is a ``jax.vjp`` *argument* — not a value
+closed over by a per-call lambda — so each virtual stage traces exactly
+once per activation shape and repeated ``step()`` calls recompile nothing.
+
 Numerical contract (tested): for any schedule kind,
     executor.step(params, batch).loss == models.loss_fn(params, batch)
-and gradients match to fp32 tolerance. BPipe's cap
-``ceil((p+2)/2)`` is asserted on the live store, not on paper.
+and gradients match to fp32 tolerance. BPipe's cap (``bpipe_cap`` /
+``bpipe_interleaved_cap``) is asserted on the live store, not on paper.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +40,8 @@ from repro.core import schedule as sched
 from repro.core.notation import Notation
 from repro.core.schedule import B, EVICT, F, LOAD
 from repro.pipeline import stage as stage_mod
+
+Unit = Tuple[int, int]  # (mb, chunk) — one stash unit
 
 
 @dataclasses.dataclass
@@ -41,13 +54,17 @@ class StoreStats:
 
 
 class ActivationStore:
-    """Per-stage stash of vjp closures, with BPipe eviction accounting."""
+    """Per-device stash of vjp closures keyed by (mb, chunk), with BPipe
+    eviction accounting. ``local[i]`` holds device i's own residuals;
+    ``foreign[i]`` holds units accepted from the paired evictor, keyed
+    (owner_stage, mb, chunk)."""
 
     def __init__(self, p: int, bytes_per_stash: float):
         self.p = p
         self.bytes_per_stash = bytes_per_stash
-        self.local: List[Dict[int, Any]] = [dict() for _ in range(p)]
-        self.foreign: List[Dict[int, Any]] = [dict() for _ in range(p)]
+        self.local: List[Dict[Unit, Any]] = [dict() for _ in range(p)]
+        self.foreign: List[Dict[Tuple[int, int, int], Any]] = [
+            dict() for _ in range(p)]
         self.peak: Dict[int, int] = {i: 0 for i in range(p)}
         self.evictions = 0
         self.loads = 0
@@ -57,24 +74,27 @@ class ActivationStore:
         n = len(self.local[i]) + len(self.foreign[i])
         self.peak[i] = max(self.peak[i], n)
 
-    def put(self, i, mb, stash):
-        assert mb not in self.local[i]
-        self.local[i][mb] = stash
+    def held(self, i) -> int:
+        return len(self.local[i]) + len(self.foreign[i])
+
+    def put(self, i, mb, stash, chunk=0):
+        assert (mb, chunk) not in self.local[i], (i, mb, chunk)
+        self.local[i][(mb, chunk)] = stash
         self._bump(i)
 
-    def pop(self, i, mb):
-        return self.local[i].pop(mb)
+    def pop(self, i, mb, chunk=0):
+        return self.local[i].pop((mb, chunk))
 
-    def evict(self, i, mb, partner):
-        stash = self.local[i].pop(mb)
-        self.foreign[partner][(i, mb)] = stash
+    def evict(self, i, mb, partner, chunk=0):
+        stash = self.local[i].pop((mb, chunk))
+        self.foreign[partner][(i, mb, chunk)] = stash
         self.evictions += 1
         self.bytes_moved += self.bytes_per_stash
         self._bump(partner)
 
-    def load(self, i, mb, partner):
-        stash = self.foreign[partner].pop((i, mb))
-        self.local[i][mb] = stash
+    def load(self, i, mb, partner, chunk=0):
+        stash = self.foreign[partner].pop((i, mb, chunk))
+        self.local[i][(mb, chunk)] = stash
         self.loads += 1
         self.bytes_moved += self.bytes_per_stash
         self._bump(i)
@@ -99,30 +119,53 @@ class PipelineExecutor:
 
     Args:
       cfg: model config (any assigned architecture).
-      p: number of pipeline stages (must be <= num_layers).
-      kind: 'gpipe' | '1f1b' | 'bpipe'.
+      p: number of pipeline stages (p * v must be <= num_layers).
+      kind: 'gpipe' | '1f1b' | 'bpipe' | '1f1b_interleaved' |
+        'bpipe_interleaved'.
       micro_batch: rows per microbatch (global batch must divide evenly).
+      v: virtual chunks per device (interleaved kinds only; ignored
+        otherwise). Interleaved streams additionally require m % p == 0.
       notation: optional paper-notation override for byte accounting.
     """
 
     def __init__(self, cfg: ModelConfig, p: int, kind: str = "1f1b",
                  micro_batch: int = 1, remat: str = "none",
-                 notation: Optional[Notation] = None, enforce_cap: bool = True):
-        assert p <= cfg.num_layers
+                 notation: Optional[Notation] = None, enforce_cap: bool = True,
+                 v: int = 2):
+        assert kind in sched.SCHEDULES, kind
         self.cfg, self.p, self.kind = cfg, p, kind
+        self.v = v if kind in sched.INTERLEAVED else 1
+        self.n_virtual = p * self.v
+        assert self.n_virtual <= cfg.num_layers, (p, self.v, cfg.num_layers)
         self.b = micro_batch
         self.remat = remat
         self.enforce_cap = enforce_cap
-        self.stage_fns = [stage_mod.make_stage_fn(cfg, p, i, remat) for i in range(p)]
+        self.cap = sched.schedule_cap(kind, p, self.v)
+        # One jitted fn per *virtual* stage, built once: jax.vjp over a
+        # stable jitted callable reuses its trace, so repeated step()
+        # calls (and every microbatch within a step) compile nothing new.
+        self.stage_fns = [
+            jax.jit(stage_mod.make_stage_fn(cfg, self.n_virtual, vs, remat))
+            for vs in range(self.n_virtual)]
+        self.splitter = stage_mod.StageSplitter(cfg, self.n_virtual)
         self.partner = {}
         for a, c in sched.bpipe_pairs(p):
             self.partner[a] = c
             self.partner[c] = a
         self.notation = notation
+        self._streams: Dict[int, Dict[int, sched.Stream]] = {}  # m -> streams
 
     # ------------------------------------------------------------------
+    def _streams_for(self, m: int) -> Dict[int, sched.Stream]:
+        if m not in self._streams:
+            if self.kind in sched.INTERLEAVED:
+                assert m % self.p == 0, (m, self.p)
+            self._streams[m] = sched.build(self.kind, self.p, m, self.v)
+        return self._streams[m]
+
     def step(self, params, batch) -> StepResult:
-        cfg, p = self.cfg, self.p
+        cfg, p, v = self.cfg, self.p, self.v
+        nv = self.n_virtual
         bsz = batch["tokens"].shape[0]
         assert bsz % self.b == 0
         m = bsz // self.b
@@ -132,22 +175,26 @@ class PipelineExecutor:
             s=seq, v=cfg.vocab_size, B=bsz, p=p, t=1)
         attention = {"none": "none", "attn": "recompute", "full": "recompute",
                      "flash": "flash"}.get(self.remat, "none")
-        store = ActivationStore(p, mm.act_bytes_per_stage(n, attention))
+        store = ActivationStore(p, mm.act_bytes_per_stage(n, attention, v))
 
-        stage_params = stage_mod.split_params(params, cfg, p)
-        streams = sched.build(self.kind, p, m)
-        cap = sched.bpipe_cap(p)
+        stage_params = self.splitter.split(params)
+        streams = self._streams_for(m)
 
-        def micro(mb):
-            sl = slice(mb * self.b, (mb + 1) * self.b)
-            return {k: v[sl] for k, v in batch.items()}
+        # Slice each microbatch once, not once per (chunk, F) — interleaving
+        # visits every microbatch p*v times on this hot path.
+        micros = [
+            {k: val[j * self.b:(j + 1) * self.b] for k, val in batch.items()}
+            for j in range(m)]
 
-        act_in: Dict[tuple, Any] = {}
-        grad_in: Dict[tuple, Any] = {}
+        # act_in/grad_in are keyed by the *virtual* stage they feed: the
+        # output of virtual stage vs routes to vs+1, which lives on device
+        # (vs+1) % p — possibly the same device, next chunk.
+        act_in: Dict[Tuple[int, int], Any] = {}
+        grad_in: Dict[Tuple[int, int], Any] = {}
         losses: Dict[int, jnp.ndarray] = {}
-        grads: List[Any] = [None] * p
-        dummy = jnp.zeros((self.b, seq, cfg.d_model),
-                          jnp.dtype(cfg.dtype))
+        grads: List[Any] = [None] * nv
+        dummy = (jnp.zeros((self.b, seq, cfg.d_model), jnp.dtype(cfg.dtype)),
+                 jnp.zeros((), jnp.float32))
 
         idx = {i: 0 for i in range(p)}
         remaining = sum(len(s) for s in streams.values())
@@ -157,46 +204,52 @@ class PipelineExecutor:
             for i in range(p):
                 while idx[i] < len(streams[i]):
                     ins = streams[i][idx[i]]
+                    vs = sched.virtual_stage(i, ins.chunk, p)
                     if ins.op == F:
-                        carry = ((dummy, jnp.zeros((), jnp.float32)) if i == 0
-                                 else act_in.get((i, ins.mb)))
+                        # pop: the boundary activation has exactly one
+                        # consumer; holding it past this F would overhang
+                        # the stash accounting the cap is asserted on.
+                        carry = dummy if vs == 0 else act_in.pop((vs, ins.mb), None)
                         if carry is None:
                             break
-                        mb_batch = micro(ins.mb)
-                        fn = self.stage_fns[i]
                         out, vjp_fn = jax.vjp(
-                            lambda sp, c: fn(sp, c, mb_batch),
-                            stage_params[i], carry)
-                        store.put(i, ins.mb, vjp_fn)
-                        if i == p - 1:
+                            self.stage_fns[vs], stage_params[vs], carry,
+                            micros[ins.mb])
+                        store.put(i, ins.mb, vjp_fn, ins.chunk)
+                        if vs == nv - 1:
                             losses[ins.mb] = out
                         else:
-                            act_in[(i + 1, ins.mb)] = out
+                            act_in[(vs + 1, ins.mb)] = out
                     elif ins.op == B:
-                        if i == p - 1:
+                        if vs == nv - 1:
                             cot = scale
                         else:
-                            cot = grad_in.get((i, ins.mb))
+                            cot = grad_in.pop((vs, ins.mb), None)
                             if cot is None:
                                 break
-                        vjp_fn = store.pop(i, ins.mb)
-                        d_sp, d_carry = vjp_fn(cot)
-                        grads[i] = d_sp if grads[i] is None else jax.tree.map(
-                            jnp.add, grads[i], d_sp)
-                        if i > 0:
-                            grad_in[(i - 1, ins.mb)] = d_carry
+                        vjp_fn = store.pop(i, ins.mb, ins.chunk)
+                        d_sp, d_carry, _ = vjp_fn(cot)
+                        grads[vs] = d_sp if grads[vs] is None else jax.tree.map(
+                            jnp.add, grads[vs], d_sp)
+                        if vs > 0:
+                            grad_in[(vs - 1, ins.mb)] = d_carry
                     elif ins.op == EVICT:
-                        store.evict(i, ins.mb, self.partner[i])
+                        store.evict(i, ins.mb, self.partner[i], ins.chunk)
                     else:  # LOAD
-                        store.load(i, ins.mb, self.partner[i])
-                    if self.enforce_cap and self.kind == "bpipe":
-                        held = len(store.local[i]) + len(store.foreign[i])
-                        assert held <= cap, (i, ins, held, cap)
+                        store.load(i, ins.mb, self.partner[i], ins.chunk)
+                    if self.enforce_cap and self.cap is not None:
+                        # EVICT/LOAD also touch the partner's store — check
+                        # both ends so acceptor-side transients can't hide
+                        # behind the acceptor's next pop.
+                        for dev in ((i, self.partner[i])
+                                    if ins.op in (EVICT, LOAD) else (i,)):
+                            assert store.held(dev) <= self.cap, \
+                                (dev, ins, store.held(dev), self.cap)
                     idx[i] += 1
                     remaining -= 1
                     progressed = True
             assert progressed, "pipeline deadlock"
 
         loss = sum(losses.values()) * scale
-        full_grads = stage_mod.merge_stage_grads(grads, cfg, p, params)
+        full_grads = self.splitter.merge(grads)
         return StepResult(loss=loss, grads=full_grads, stats=store.stats())

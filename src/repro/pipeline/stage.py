@@ -5,6 +5,14 @@ per-stage, per-layer params; ``merge_stage_grads`` restacks gradients into
 the original structure so the optimizer is pipeline-agnostic. Tied
 embeddings are replicated onto the first and last stage and their grads
 summed at merge (Megatron ties them with an all-reduce the same way).
+
+All functions are written over *virtual* stages: for interleaved
+schedules with v chunks per device, pass ``p * v`` as the stage count and
+index with ``virtual_stage = chunk * p + device`` — chunk c on device s
+then holds the layer slice of virtual stage c*p + s, the first virtual
+stage embeds, and the last computes the loss. ``StageSplitter`` hoists
+the assignment/PatternStack bookkeeping so executors don't rebuild it
+every step.
 """
 from __future__ import annotations
 
@@ -31,54 +39,64 @@ def layer_assignment(cfg: ModelConfig, p: int) -> List[List[int]]:
     return out
 
 
-def get_layer_params(params, cfg: ModelConfig, ℓ: int):
-    """Extract layer ℓ's params from the PatternStack structure."""
-    stack = PatternStack(cfg)
-    k = len(stack.pattern)
-    blk, j = divmod(ℓ, k)
-    if blk < stack.n_full:
-        return jax.tree.map(lambda a: a[blk], params["blocks"][f"pos{j}"])
-    return params["blocks"][f"rem{ℓ - stack.n_full * k}"]
+class StageSplitter:
+    """Per-(cfg, n_stages) split/merge with the layer assignment and
+    PatternStack bookkeeping computed once (executors hold one of these
+    across steps instead of rebuilding it per call)."""
+
+    def __init__(self, cfg: ModelConfig, n_stages: int):
+        self.cfg, self.n = cfg, n_stages
+        self.assign = layer_assignment(cfg, n_stages)
+        self.stack = PatternStack(cfg)
+
+    def _layer_params(self, params, ℓ: int):
+        k = len(self.stack.pattern)
+        blk, j = divmod(ℓ, k)
+        if blk < self.stack.n_full:
+            return jax.tree.map(lambda a: a[blk], params["blocks"][f"pos{j}"])
+        return params["blocks"][f"rem{ℓ - self.stack.n_full * k}"]
+
+    def split(self, params) -> List[Dict[str, Any]]:
+        stages = []
+        for i, layers in enumerate(self.assign):
+            sp: Dict[str, Any] = {
+                "layers": [self._layer_params(params, ℓ) for ℓ in layers]}
+            if i == 0:
+                sp["embed"] = params["embed"]
+            if i == self.n - 1:
+                sp["final_norm"] = params["final_norm"]
+                # unembed weights (tied table or separate matrix)
+                sp["unembed"] = params["embed"]
+            stages.append(sp)
+        return stages
+
+    def merge(self, stage_grads: List[Dict[str, Any]]):
+        """Restack per-stage layer grads into full-model param structure."""
+        k = len(self.stack.pattern)
+        per_layer = {}
+        for sg, layers in zip(stage_grads, self.assign):
+            for local, ℓ in enumerate(layers):
+                per_layer[ℓ] = sg["layers"][local]
+        blocks: Dict[str, Any] = {}
+        for j in range(k):
+            rows = [per_layer[blk * k + j] for blk in range(self.stack.n_full)]
+            blocks[f"pos{j}"] = jax.tree.map(lambda *a: jnp.stack(a), *rows)
+        for i in range(len(self.stack.rem)):
+            blocks[f"rem{i}"] = per_layer[self.stack.n_full * k + i]
+        embed_grad = stage_grads[0]["embed"]
+        tail = stage_grads[-1]
+        embed_grad = jax.tree.map(jnp.add, embed_grad, tail["unembed"])
+        return {"embed": embed_grad, "blocks": blocks,
+                "final_norm": tail["final_norm"]}
 
 
 def split_params(params, cfg: ModelConfig, p: int) -> List[Dict[str, Any]]:
-    assign = layer_assignment(cfg, p)
-    stages = []
-    for i, layers in enumerate(assign):
-        sp: Dict[str, Any] = {
-            "layers": [get_layer_params(params, cfg, ℓ) for ℓ in layers]}
-        if i == 0:
-            sp["embed"] = params["embed"]
-        if i == p - 1:
-            sp["final_norm"] = params["final_norm"]
-            # unembed weights (tied table or separate matrix)
-            sp["unembed"] = params["embed"]
-        stages.append(sp)
-    return stages
+    return StageSplitter(cfg, p).split(params)
 
 
 def merge_stage_grads(stage_grads: List[Dict[str, Any]], cfg: ModelConfig,
-                      p: int, params_template):
-    """Restack per-stage layer grads into full-model param structure."""
-    assign = layer_assignment(cfg, p)
-    stack = PatternStack(cfg)
-    k = len(stack.pattern)
-    # gather per-layer grads in global order
-    per_layer = {}
-    for sg, layers in zip(stage_grads, assign):
-        for local, ℓ in enumerate(layers):
-            per_layer[ℓ] = sg["layers"][local]
-    blocks: Dict[str, Any] = {}
-    for j in range(k):
-        rows = [per_layer[blk * k + j] for blk in range(stack.n_full)]
-        blocks[f"pos{j}"] = jax.tree.map(lambda *a: jnp.stack(a), *rows)
-    for i in range(len(stack.rem)):
-        blocks[f"rem{i}"] = per_layer[stack.n_full * k + i]
-    embed_grad = stage_grads[0]["embed"]
-    tail = stage_grads[-1]
-    embed_grad = jax.tree.map(jnp.add, embed_grad, tail["unembed"])
-    return {"embed": embed_grad, "blocks": blocks,
-            "final_norm": tail["final_norm"]}
+                      p: int, params_template=None):
+    return StageSplitter(cfg, p).merge(stage_grads)
 
 
 # ---------------------------------------------------------------------------

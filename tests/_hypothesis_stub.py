@@ -1,0 +1,209 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (offline fallback).
+
+The tier-1 suite property-tests schedules with hypothesis; this container
+has no network and no hypothesis wheel, so ``tests/conftest.py`` installs
+this module as ``sys.modules["hypothesis"]`` when the real package is
+absent.  It implements exactly the API surface the suite uses:
+
+    from hypothesis import given, settings, strategies as st
+    st.integers(lo, hi)  st.floats(lo, hi)  st.sampled_from(seq)
+    st.tuples(*strats)   st.lists(strat, min_size=, max_size=)
+    strategy.map(fn)
+
+Sampling is seeded and deterministic: each ``@given`` test runs its
+strategies' boundary combinations first (lo/hi corners, first/last
+choices) and then fills up to ``max_examples`` with draws from a fixed
+PRNG, so failures reproduce run-to-run.  This is a *fallback*, not a
+replacement — no shrinking, no example database; when hypothesis is
+installed the real thing is used (see conftest).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import random
+import sys
+import types
+from typing import Any, Callable, List, Sequence
+
+_SEED = 0xB17E5EED
+_DEFAULT_MAX_EXAMPLES = 25
+_MAX_BOUNDARY_COMBOS = 8
+
+
+class SearchStrategy:
+    """Base strategy: deterministic boundary examples + seeded draws."""
+
+    def example(self, rng: random.Random) -> Any:
+        raise NotImplementedError
+
+    def boundary(self) -> List[Any]:
+        return []
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return _Mapped(self, fn)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base: SearchStrategy, fn: Callable):
+        self.base, self.fn = base, fn
+
+    def example(self, rng):
+        return self.fn(self.base.example(rng))
+
+    def boundary(self):
+        return [self.fn(x) for x in self.base.boundary()]
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, lo: int, hi: int):
+        assert lo <= hi, (lo, hi)
+        self.lo, self.hi = lo, hi
+
+    def example(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+    def boundary(self):
+        out = [self.lo, self.hi]
+        if self.hi - self.lo > 1:
+            out.append((self.lo + self.hi) // 2)
+        return list(dict.fromkeys(out))
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, lo: float, hi: float):
+        assert lo <= hi, (lo, hi)
+        self.lo, self.hi = lo, hi
+
+    def example(self, rng):
+        return rng.uniform(self.lo, self.hi)
+
+    def boundary(self):
+        return list(dict.fromkeys([self.lo, self.hi]))
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elems: Sequence[Any]):
+        self.elems = list(elems)
+        assert self.elems
+
+    def example(self, rng):
+        return rng.choice(self.elems)
+
+    def boundary(self):
+        out = [self.elems[0], self.elems[-1]]
+        return out[:1] if out[0] == out[-1] else out
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, *strats: SearchStrategy):
+        self.strats = strats
+
+    def example(self, rng):
+        return tuple(s.example(rng) for s in self.strats)
+
+    def boundary(self):
+        combos = itertools.product(*(s.boundary() or [s.example(random.Random(_SEED))]
+                                     for s in self.strats))
+        return [tuple(c) for c in itertools.islice(combos, _MAX_BOUNDARY_COMBOS)]
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elem: SearchStrategy, min_size: int = 0,
+                 max_size: int = 10):
+        self.elem, self.min_size, self.max_size = elem, min_size, max_size
+
+    def example(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elem.example(rng) for _ in range(n)]
+
+    def boundary(self):
+        rng = random.Random(_SEED)
+        out = [[self.elem.example(rng) for _ in range(self.min_size)],
+               [self.elem.example(rng) for _ in range(self.max_size)]]
+        return [x for x in out if len(x) >= self.min_size][:2]
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
+    return _Floats(min_value, max_value)
+
+
+def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    return _SampledFrom(elements)
+
+
+def tuples(*strats: SearchStrategy) -> SearchStrategy:
+    return _Tuples(*strats)
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int = 10, **_kw) -> SearchStrategy:
+    return _Lists(elements, min_size=min_size, max_size=max_size)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_kw) -> Callable:
+    """Record max_examples on the (possibly already-wrapped) test fn."""
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: SearchStrategy) -> Callable:
+    """Run the test over boundary combos + seeded draws, deterministically."""
+    assert strats and all(isinstance(s, SearchStrategy) for s in strats), strats
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            max_examples = getattr(wrapper, "_stub_max_examples",
+                                   getattr(fn, "_stub_max_examples",
+                                           _DEFAULT_MAX_EXAMPLES))
+            examples: List[tuple] = []
+            bnds = [s.boundary() for s in strats]
+            if all(bnds):
+                examples.extend(itertools.islice(
+                    itertools.product(*bnds), _MAX_BOUNDARY_COMBOS))
+            rng = random.Random(_SEED)
+            while len(examples) < max_examples:
+                examples.append(tuple(s.example(rng) for s in strats))
+            for ex in examples[:max_examples]:
+                try:
+                    fn(*ex)
+                except Exception as e:  # noqa: BLE001 — annotate the example
+                    raise AssertionError(
+                        f"falsifying example (hypothesis stub): "
+                        f"{fn.__name__}{ex!r}") from e
+        # pytest introspects the signature for fixture names; the wrapper
+        # supplies every argument itself, so present a 0-arg signature and
+        # drop __wrapped__ (inspect.signature follows it otherwise).
+        wrapper.__signature__ = inspect.Signature()
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+# Expose a ``hypothesis.strategies``-shaped submodule so both
+# ``from hypothesis import strategies as st`` and
+# ``import hypothesis.strategies`` resolve against this stub.
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.floats = floats
+strategies.sampled_from = sampled_from
+strategies.tuples = tuples
+strategies.lists = lists
+strategies.SearchStrategy = SearchStrategy
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (idempotent)."""
+    mod = sys.modules[__name__]
+    sys.modules.setdefault("hypothesis", mod)
+    sys.modules.setdefault("hypothesis.strategies", strategies)

@@ -14,6 +14,7 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import sys; sys.path.insert(0, %r)
     import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro import compat
     from repro.configs import get_config
     from repro.pipeline.spmd import init_pipeline_params, make_spmd_train_loss
     from repro.models.blocks import apply_layer
@@ -22,8 +23,7 @@ SCRIPT = textwrap.dedent("""
     cfg = dataclasses.replace(get_config("qwen1.5-0.5b").reduced(),
                               num_layers=4, dtype="float32")
     p = 4
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     params = init_pipeline_params(jax.random.PRNGKey(0), cfg, p)
     B, s, m = 8, 16, 4
     toks = jax.random.randint(jax.random.PRNGKey(3), (B, s+1), 0, cfg.vocab_size)
@@ -46,7 +46,7 @@ SCRIPT = textwrap.dedent("""
         nll = -jnp.take_along_axis(logp, jnp.maximum(lbl,0)[..., None], -1)[..., 0]
         return jnp.mean(nll)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         for bpipe in (False, True):
             lossf = make_spmd_train_loss(cfg, mesh, p, num_micro=m, bpipe_stash=bpipe)
             loss = jax.jit(lossf)(params, batch)
