@@ -25,12 +25,15 @@ def simulate_mfu(p, m, Tf, kind, t_move):
     return 1.0 / res.makespan, res
 
 
-def main(print_csv=True):
+def main(print_csv=True, smoke=False):
     rows = []
-    for p in GRID_P:
-        for B in GRID_B:
+    grid_p = GRID_P[:1] if smoke else GRID_P
+    grid_b = GRID_B[:1] if smoke else GRID_B
+    grid_tm = GRID_TMOVE[:2] if smoke else GRID_TMOVE
+    for p in grid_p:
+        for B in grid_b:
             for bx in GRID_BX:
-                for tm in GRID_TMOVE:
+                for tm in grid_tm:
                     # stage MFU gain with b: synthetic 10% per doubling
                     mfu_y, mfu_x = 0.45, 0.45 * (1.1 ** (bx - 1).bit_length())
                     n = Notation(a=8, b=bx, h=1024, l=32, s=2048, v=32000,

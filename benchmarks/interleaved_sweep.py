@@ -30,11 +30,13 @@ def _row(kind, p, m, v, t_move_rel=0.0):
             cap if cap is not None else "-", res.load_stall)
 
 
-def main(print_csv=True):
+def main(print_csv=True, smoke=False):
     rows = []
-    for p, m in GRID:
+    grid = GRID[:1] if smoke else GRID
+    vs = VS[:1] if smoke else VS
+    for p, m in grid:
         cases = [("1f1b", 1, 0.0), ("bpipe", 1, 0.0)]
-        for v in VS:
+        for v in vs:
             cases += [("1f1b_interleaved", v, 0.0),
                       ("bpipe_interleaved", v, 0.0),
                       ("bpipe_interleaved", v, 1.0)]

@@ -28,12 +28,14 @@ def fusion_count(f, *args) -> int:
     return txt.count(" fusion(") + txt.count(" fusion.")
 
 
-def main(print_csv=True):
+def main(print_csv=True, smoke=False):
     key = jax.random.PRNGKey(0)
     rows = []
+    sm_shape = (1, 2, 64, 64) if smoke else (4, 8, 256, 256)
+    seqs = (64,) if smoke else (128, 256)
 
     # --- fused softmax: XLA-fused chain vs Pallas kernel -------------------
-    x = jax.random.normal(key, (4, 8, 256, 256), jnp.bfloat16)
+    x = jax.random.normal(key, sm_shape, jnp.bfloat16)
     t_unfused = _time(jax.jit(
         lambda x: ops.unfused_softmax_chain(x, 0.125, True)), x)
     t_pallas = _time(jax.jit(
@@ -44,14 +46,15 @@ def main(print_csv=True):
                  "interpret_mode=1"))
 
     # --- flash attention vs reference --------------------------------------
-    for s in (128, 256):
+    for s in seqs:
         q = jax.random.normal(key, (1, s, 8, 64), jnp.bfloat16)
         k = jax.random.normal(key, (1, s, 2, 64), jnp.bfloat16)
         v = jax.random.normal(key, (1, s, 2, 64), jnp.bfloat16)
+        blk = min(s, 128)
         t_ref = _time(jax.jit(lambda q, k, v: ref.flash_attention_ref(
             q, k, v, causal=True)), q, k, v)
         t_fa = _time(jax.jit(lambda q, k, v: ops.flash_attention(
-            q, k, v, True, 0, 0.0, None, 128, 128, True)), q, k, v)
+            q, k, v, True, 0, 0.0, None, blk, blk, True)), q, k, v)
         rows.append((f"flash_attn_ref_s{s}", t_ref, "jnp"))
         rows.append((f"flash_attn_pallas_s{s}", t_fa, "interpret_mode=1"))
 

@@ -16,9 +16,9 @@ CASES = [
 ]
 
 
-def main(print_csv=True):
+def main(print_csv=True, smoke=False):
     rows = []
-    for name, n, att, bs in CASES:
+    for name, n, att, bs in (CASES[:1] if smoke else CASES):
         for b in bs:
             for kind in ("1f1b", "bpipe"):
                 mems = MM.per_stage_memory(n.replace(b=b), att, kind)

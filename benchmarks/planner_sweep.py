@@ -1,0 +1,79 @@
+"""Planner sweep: run the schedule auto-planner over every registered
+config (the paper's two models + the 11 assigned architectures) and
+print the winning plan per attention arm.
+
+Columns: config, arm, kind, v, b, m, cap, peak_GiB, mfu, n_feasible,
+n_rejected (break-even), n_oom — or best=none when nothing fits.
+
+``--smoke`` (via benchmarks/run.py) plans only the two smallest configs
+at a toy shape, exercising the full enumerate -> prune -> rank path in
+seconds on CPU.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config, list_configs
+from repro.core.notation import A100_HBM_BYTES, from_model
+from repro.planner import SearchSpace, plan_config, recommend
+from repro.planner.rank import arms_of
+
+
+def _pow2_at_most(x: int) -> int:
+    p = 1
+    while p * 2 <= x:
+        p *= 2
+    return p
+
+
+def plan_one(name: str, smoke: bool = False):
+    cfg = get_config(name)
+    if smoke:
+        p = min(4, _pow2_at_most(cfg.num_layers))
+        n = from_model(cfg, b=1, s=512, B=32, p=p, t=1)
+        hbm = 16 * 1024**3
+        search = SearchSpace(vs=(2,))
+    else:
+        p = min(8, _pow2_at_most(cfg.num_layers))
+        n = from_model(cfg, b=1, s=2048, B=128, p=p, t=4)
+        hbm = A100_HBM_BYTES
+        search = SearchSpace()
+    return n, plan_config(n, cfg, hbm, search=search)
+
+
+def smallest_configs(k: int = 2):
+    return sorted(list_configs(),
+                  key=lambda c: get_config(c).param_count())[:k]
+
+
+def main(print_csv=True, smoke=False):
+    names = smallest_configs(2) if smoke else list_configs()
+    rows = []
+    for name in names:
+        n, ranked = plan_one(name, smoke)
+        counts = {
+            "feasible": sum(1 for p in ranked if p.ok),
+            "rejected": sum(1 for p in ranked if p.verdict == "reject"),
+            "oom": sum(1 for p in ranked if p.verdict == "infeasible"),
+        }
+        for arm in arms_of(ranked) + [None]:
+            best = recommend(ranked, arm)
+            tag = arm or "overall"
+            rows.append((name, tag, best, counts))
+            if not print_csv:
+                continue
+            if best is None:
+                print(f"planner_sweep,{name},{tag},best=none,"
+                      f"oom={counts['oom']}")
+            else:
+                c = best.cand
+                print(f"planner_sweep,{name},{tag},kind={c.kind},v={c.v},"
+                      f"b={c.b},m={c.m},"
+                      f"cap={c.cap if c.cap is not None else 'def'},"
+                      f"peak_gib={best.feas.peak_gib:.1f},"
+                      f"mfu={100 * best.mfu:.1f},"
+                      f"feasible={counts['feasible']},"
+                      f"rejected={counts['rejected']},oom={counts['oom']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

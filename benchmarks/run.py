@@ -1,6 +1,6 @@
 """Benchmark orchestrator — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run [--smoke] [--only NAME]
 
 Prints ``name,...`` CSV rows:
   table3             paper Table 3 (MFU, all 10 experiments, +TPU variant)
@@ -10,22 +10,49 @@ Prints ``name,...`` CSV rows:
   estimator_accuracy eq.4 vs discrete-event simulator across a grid
   kernel_bench       Pallas kernels + §3.2 fusion-count analysis
   roofline           per-(arch x shape) roofline terms from the dry-run
+  planner_sweep      schedule auto-planner over every registered config
+
+``--smoke`` runs every benchmark on tiny CPU-only shapes (subset grids,
+the two smallest configs for the planner) so the whole suite doubles as
+an offline regression check — scripts/check.sh wires it in.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description="run reproduction benchmarks")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs, CPU-only, seconds not minutes")
+    ap.add_argument("--only", default="",
+                    help="run a single benchmark by name")
+    args = ap.parse_args(argv)
+
     from benchmarks import (estimator_accuracy, interleaved_sweep,
-                            kernel_bench, memory_balance, roofline_table,
-                            table3, table5)
+                            kernel_bench, memory_balance, planner_sweep,
+                            roofline_table, table3, table5)
+    mods = {
+        "table3": table3,
+        "table5": table5,
+        "memory_balance": memory_balance,
+        "interleaved_sweep": interleaved_sweep,
+        "estimator_accuracy": estimator_accuracy,
+        "kernel_bench": kernel_bench,
+        "roofline": roofline_table,
+        "planner_sweep": planner_sweep,
+    }
+    if args.only:
+        if args.only not in mods:
+            sys.exit(f"unknown benchmark {args.only!r}; "
+                     f"known: {sorted(mods)}")
+        mods = {args.only: mods[args.only]}
     ok = True
-    for mod in (table3, table5, memory_balance, interleaved_sweep,
-                estimator_accuracy, kernel_bench, roofline_table):
+    for mod in mods.values():
         try:
-            mod.main()
+            mod.main(smoke=args.smoke)
         except Exception:  # noqa: BLE001
             ok = False
             print(f"BENCH_FAIL,{mod.__name__}", file=sys.stderr)

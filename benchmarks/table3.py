@@ -43,9 +43,11 @@ def row_mfu(row, link_bw: float) -> dict:
             "makespan": res.makespan}
 
 
-def main(print_csv=True):
+def main(print_csv=True, smoke=False):
     rows = []
-    for r in PAPER_ROWS:
+    # smoke keeps one row per (model, schedule) flavor — enough to catch
+    # estimator/simulator regressions without the full grid
+    for r in (PAPER_ROWS[:3] if smoke else PAPER_ROWS):
         nv = row_mfu(r, NVLINK_BW)
         ici = row_mfu(r, TPU_V5E_ICI_BW)
         rows.append((r, nv, ici))

@@ -3,11 +3,18 @@ schedules — plain and interleaved (v virtual chunks per stage) — and
 print the per-stage activation-stash peaks: the paper's Fig. 1, live.
 
     PYTHONPATH=src python examples/bpipe_pipeline.py [--stages 4] [--v 2]
+    PYTHONPATH=src python examples/bpipe_pipeline.py --plan auto
 
 All schedules produce bit-comparable losses (same math, different
 memory); the printed peaks show 1F1B's p-x imbalance, BPipe's
 ceil((p+2)/2) cap, interleaving's stash growth, and the interleaved
 BPipe cap clawing it back.
+
+``--plan auto`` demonstrates the full planner loop instead of sweeping
+every kind by hand: the auto-planner picks the schedule under a toy HBM
+budget, the executor runs it, the last step is traced, and the trace is
+fed back through ``planner.calibrate`` to re-ground the simulator in
+measured Tf/Tb (plan -> build -> execute -> trace -> recalibrate).
 """
 import argparse
 import dataclasses
@@ -28,6 +35,25 @@ from repro.optim import adam  # noqa: E402
 from repro.pipeline import PipelineExecutor  # noqa: E402
 
 
+def auto_plan(cfg, p, v, batch_rows, seq):
+    """Ask the planner for the schedule instead of picking one by hand."""
+    from repro.core import memory_model as MM
+    from repro.core.notation import Notation
+    from repro.planner import SearchSpace, plan_config, recommend, report
+
+    n = Notation(a=cfg.num_heads, b=1, h=cfg.d_model, l=cfg.num_layers,
+                 s=seq, v=cfg.vocab_size, B=batch_rows, p=p, t=1)
+    # a toy budget tight enough that fat stashes actually prune
+    budget = 1.2 * MM.max_stage_bytes(n, "none", "1f1b", cfg)
+    search = SearchSpace(attentions=("none",), vs=(v,) if v >= 2 else (2,))
+    ranked = plan_config(n, cfg, budget, search=search, workspace=0.0)
+    print(f"planner: {len(ranked)} candidates under "
+          f"{budget / 2**20:.0f} MiB/device")
+    print(report.format_table(ranked, top=6))
+    print(report.recommendation_line(cfg.name, ranked, "none"))
+    return recommend(ranked, "none")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--stages", type=int, default=4)
@@ -35,6 +61,9 @@ def main():
     ap.add_argument("--steps", type=int, default=5)
     ap.add_argument("--v", type=int, default=2,
                     help="virtual chunks per stage for interleaved kinds")
+    ap.add_argument("--plan", default="all", choices=["all", "auto"],
+                    help="all: sweep every kind; auto: let repro.planner "
+                         "pick, then trace + recalibrate")
     args = ap.parse_args()
     p = args.stages
 
@@ -49,27 +78,52 @@ def main():
     print(f"pipeline: p={p}, m={m} microbatches, "
           f"BPipe cap = ceil((p+2)/2) = {S.bpipe_cap(p)}, "
           f"interleaved (v={args.v}) cap = {S.bpipe_interleaved_cap(p, args.v)}")
-    kinds = ["gpipe", "1f1b", "bpipe"]
-    # interleaved streams need m to be a multiple of p and v >= 2
-    if m % p == 0 and args.v >= 2:
-        kinds += ["1f1b_interleaved", "bpipe_interleaved"]
+
+    caps = {}
+    if args.plan == "auto":
+        best = auto_plan(cfg, p, args.v, 8, 32)
+        assert best is not None, "no feasible plan under the toy budget"
+        kinds = [best.cand.kind]
+        args.micro = best.cand.b
+        args.v = max(best.cand.v, 2)
+        caps[best.cand.kind] = best.cand.cap
+        m = 8 // args.micro
+    else:
+        kinds = ["gpipe", "1f1b", "bpipe"]
+        # interleaved streams need m to be a multiple of p and v >= 2
+        if m % p == 0 and args.v >= 2:
+            kinds += ["1f1b_interleaved", "bpipe_interleaved"]
     for kind in kinds:
         ex = PipelineExecutor(cfg, p=p, kind=kind, micro_batch=args.micro,
-                              v=args.v)
+                              v=args.v, cap=caps.get(kind))
         params_k, opt = params, adam.init(params)
         losses = []
         stats = None
+        events = None
         for i in range(args.steps):
             batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, dc, i).items()}
-            res = ex.step(params_k, batch)
+            trace = args.plan == "auto" and i == args.steps - 1
+            res = ex.step(params_k, batch, trace=trace)
             params_k, opt, _ = adam.update(params_k, res.grads, opt, tcfg)
             losses.append(float(res.loss))
             stats = res.stats
+            events = res.events or events
         peaks = [stats.peak_local[i] for i in range(p)]
         print(f"{kind:>6}: losses {['%.3f' % l for l in losses]}")
         print(f"        peak stash/stage {peaks}  "
               f"evictions={stats.evictions} loads={stats.loads} "
               f"moved={stats.bytes_moved/2**20:.1f}MiB(modelled)")
+        if events:
+            # close the loop: trace -> recalibrate -> simulate
+            from repro.planner import calibrate
+            ev = ex.v if kind in S.INTERLEAVED else 1
+            costs = calibrate.fit_trace(events, v=ev, b=args.micro)
+            replayed = calibrate.replay(costs, kind, p, m, v=ex.v,
+                                        cap=caps.get(kind))
+            print(f"        recalibrated from trace: Tf={costs.Tf*1e3:.1f}ms "
+                  f"Tb={costs.Tb*1e3:.1f}ms -> simulated step "
+                  f"{replayed.makespan*1e3:.0f}ms "
+                  f"(traced step {max(e.end for e in events)*1e3:.0f}ms)")
 
 
 if __name__ == "__main__":

@@ -11,4 +11,18 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 python -m compileall -q src benchmarks examples tests
+
+# Benchmark suite on tiny CPU-only shapes (includes the planner sweep
+# over the two smallest configs) — schedule/planner regressions fail
+# here, not just in tier-1.
+PYTHONPATH=src python -m benchmarks.run --smoke > /dev/null
+
+# Planner acceptance verdicts (paper Table 3): BPipe must win
+# GPT-3-recompute and lose LLaMA.
+PYTHONPATH=src python -m repro.launch.plan --config gpt3_96b \
+    --attention recompute --top 0 \
+    | grep -q 'PLAN gpt3-96b \[recompute\]: bpipe'
+PYTHONPATH=src python -m repro.launch.plan --config llama_65b --top 0 \
+    | grep -q 'PLAN llama-65b: 1f1b'
+
 python -m pytest -q "$@"

@@ -48,18 +48,34 @@ def pair_adjacent_layout(p: int) -> List[int]:
     return layout
 
 
-def plan(p: int, m: int) -> BPipePlan:
+def plan(p: int, m: int,
+         stage_to_device: Optional[Tuple[int, ...]] = None) -> BPipePlan:
+    """BPipe plan for p stages / m microbatches. ``stage_to_device``
+    overrides the pair-adjacent default — e.g. when the stages are laid
+    onto a mesh axis larger than p."""
     return BPipePlan(
         p=p, m=m, cap=bpipe_cap(p),
         pairs=tuple(bpipe_pairs(p)),
         evictions=tuple(num_evictions(p, m, i) for i in range(p)),
-        stage_to_device=tuple(pair_adjacent_layout(p)),
+        stage_to_device=(tuple(stage_to_device) if stage_to_device is not None
+                         else tuple(pair_adjacent_layout(p))),
     )
 
 
+def ring_extent(plan_: BPipePlan) -> int:
+    """Size of the device ring the layout maps onto: the extent of
+    ``stage_to_device``, NOT p — the mesh axis can be larger than the
+    stage count (e.g. 4 stages spread over an 8-device ring)."""
+    return max(plan_.stage_to_device) + 1
+
+
 def hop_distance(plan_: BPipePlan, ring_size: Optional[int] = None) -> Dict[Tuple[int, int], int]:
-    """ICI ring hop distance between each evictor/acceptor pair."""
-    n = ring_size or plan_.p
+    """ICI ring hop distance between each evictor/acceptor pair.
+
+    The wraparound arm is measured on the *device* ring (``ring_extent``),
+    not on p: with p stages laid onto a larger mesh axis, a p-sized ring
+    under- (or negatively!) counted the wrap distance."""
+    n = ring_size or ring_extent(plan_)
     out = {}
     for a, b in plan_.pairs:
         da, db = plan_.stage_to_device[a], plan_.stage_to_device[b]

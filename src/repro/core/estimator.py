@@ -76,6 +76,45 @@ def required_stage_gain(n: Notation, bx: int, by: int,
     return need * (1.0 + overhead)
 
 
+def fit_stage_mfu(points, k_default: float = 0.25):
+    """Fit the saturating single-stage throughput curve
+        MFU_stage(b) = M * b / (b + k)
+    through measured (b, MFU_stage) points and return it as a callable.
+
+    This is the paper's "two cheap single-stage measurements" recipe made
+    programmatic: two points pin (M, k) exactly (the fit is linear in
+    (1/b, 1/MFU) space: 1/MFU = 1/M + (k/M)/b); more points are fit by
+    least squares; a single point borrows ``k_default`` for the shape.
+    The planner interpolates/extrapolates stage MFU to unmeasured micro
+    batch sizes with it — feasibility pruning keeps the extrapolation
+    honest (b's beyond the measured range are usually OOM anyway).
+    """
+    pts = sorted(dict(points).items())
+    assert pts and all(b > 0 and mfu > 0 for b, mfu in pts), pts
+    if len(pts) == 1:
+        b0, m0 = pts[0]
+        M = m0 * (b0 + k_default) / b0
+        k = k_default
+    else:
+        xs = [1.0 / b for b, _ in pts]
+        ys = [1.0 / mfu for _, mfu in pts]
+        nn = len(pts)
+        sx, sy = sum(xs), sum(ys)
+        sxx = sum(x * x for x in xs)
+        sxy = sum(x * y for x, y in zip(xs, ys))
+        denom = nn * sxx - sx * sx
+        slope = (nn * sxy - sx * sy) / denom      # = k/M
+        inter = (sy - slope * sx) / nn            # = 1/M
+        if inter <= 0 or slope < 0:
+            # Degenerate (non-saturating) data: fall back to a flat curve
+            # at the largest measurement — conservative for BPipe, which
+            # only wins through stage gain.
+            top = max(mfu for _, mfu in pts)
+            return lambda b: top
+        M, k = 1.0 / inter, slope / inter
+    return lambda b: M * b / (b + k)
+
+
 # ---------------------------------------------------------------------------
 # Paper data (Tables 3 and 5) for the reproduction benchmarks.
 # ---------------------------------------------------------------------------

@@ -73,15 +73,17 @@ class StageMemory:
 
 
 def per_stage_memory(n: Notation, attention: str, kind: str,
-                     cfg: ModelConfig = None, v: int = 1) -> List[StageMemory]:
+                     cfg: ModelConfig = None, v: int = 1,
+                     cap: int = None) -> List[StageMemory]:
     """Peak memory per pipeline stage under schedule ``kind``. For
     interleaved kinds pass v >= 2: stash-unit counts come from the
     v-chunk streams and each unit is byte-weighted at 1/v of the
-    device's layers."""
+    device's layers. ``cap`` overrides the BPipe-family stash bound
+    (the planner's cap search dimension)."""
     if kind in sched.INTERLEAVED:
         assert v >= 2, (kind, v)
     m = n.num_micro
-    peaks = sched.peak_stash(kind, n.p, m, v)
+    peaks = sched.peak_stash(kind, n.p, m, v, cap)
     per_mb = act_bytes_per_stage(n, attention, v if kind in sched.INTERLEAVED else 1)
     pb = param_bytes_per_stage(n, cfg)
     out = []
@@ -93,15 +95,18 @@ def per_stage_memory(n: Notation, attention: str, kind: str,
 
 
 def max_stage_bytes(n: Notation, attention: str, kind: str,
-                    cfg: ModelConfig = None, v: int = 1) -> float:
-    return max(s.total for s in per_stage_memory(n, attention, kind, cfg, v))
+                    cfg: ModelConfig = None, v: int = 1,
+                    cap: int = None) -> float:
+    return max(s.total
+               for s in per_stage_memory(n, attention, kind, cfg, v, cap))
 
 
 def fits(n: Notation, attention: str, kind: str, device_bytes: float,
          cfg: ModelConfig = None, workspace: float = 4 * 1024**3,
-         v: int = 1) -> bool:
+         v: int = 1, cap: int = None) -> bool:
     """Does every stage fit in device memory (leaving CUDA/XLA workspace)?"""
-    return max_stage_bytes(n, attention, kind, cfg, v) + workspace <= device_bytes
+    return (max_stage_bytes(n, attention, kind, cfg, v, cap)
+            + workspace <= device_bytes)
 
 
 def max_micro_batch(n: Notation, attention: str, kind: str,

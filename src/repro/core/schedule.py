@@ -99,15 +99,22 @@ def _balance(base: Stream, cap: int) -> Stream:
     return out
 
 
-def bpipe(p: int, m: int, stage: int) -> Stream:
+def bpipe(p: int, m: int, stage: int, cap: int | None = None) -> Stream:
     """BPipe = 1F1B + continuous activation balancing at cap
     ceil((p+2)/2) (Kim et al.). Stages with steady in-flight
     p-stage <= cap never evict (acceptors / middle stages). In steady
     state every forward evicts and every backward reloads — the traffic
     is continuous, which is why overlap (NVLink / 1-hop ICI) is
     load-bearing for BPipe's viability; the simulator charges it.
+
+    ``cap`` overrides the paper's default bound: the planner searches
+    over it (looser cap -> fewer evictions but more evictor memory;
+    tighter -> the reverse, pushed onto the acceptor). Must be >= 2
+    (one live forward plus the in-flight LOAD transient).
     """
-    return _balance(one_f_one_b(p, m, stage), bpipe_cap(p))
+    cap = bpipe_cap(p) if cap is None else cap
+    assert cap >= 2, cap
+    return _balance(one_f_one_b(p, m, stage), cap)
 
 
 # ---------------------------------------------------------------------------
@@ -164,12 +171,15 @@ def bpipe_interleaved_cap(p: int, v: int = 2) -> int:
     return (pair_sum + 1) // 2 + 1
 
 
-def bpipe_interleaved(p: int, m: int, stage: int, v: int = 2) -> Stream:
+def bpipe_interleaved(p: int, m: int, stage: int, v: int = 2,
+                      cap: int | None = None) -> Stream:
     """BPipe x interleaved-1F1B composition (not in either paper): the
     same evict-newest/load-before-backward balancing applied to
-    (chunk, mb) units, bounded by ``bpipe_interleaved_cap``."""
-    return _balance(one_f_one_b_interleaved(p, m, stage, v),
-                    bpipe_interleaved_cap(p, v))
+    (chunk, mb) units, bounded by ``bpipe_interleaved_cap`` (or a
+    planner-chosen ``cap`` override, >= 2)."""
+    cap = bpipe_interleaved_cap(p, v) if cap is None else cap
+    assert cap >= 2, cap
+    return _balance(one_f_one_b_interleaved(p, m, stage, v), cap)
 
 
 def num_evictions(p: int, m: int, stage: int) -> int:
@@ -196,20 +206,30 @@ def virtual_stage(stage: int, chunk: int, p: int) -> int:
     return chunk * p + stage
 
 
-def schedule_cap(kind: str, p: int, v: int = 2) -> int | None:
-    """The schedule's per-device stash bound, or None if unbounded."""
+# Kinds that balance stash under a cap (and accept a ``cap`` override).
+BPIPE_FAMILY = frozenset({"bpipe", "bpipe_interleaved"})
+
+
+def schedule_cap(kind: str, p: int, v: int = 2,
+                 cap: int | None = None) -> int | None:
+    """The schedule's per-device stash bound (or the ``cap`` override for
+    BPipe-family kinds), or None if unbounded."""
     if kind == "bpipe":
-        return bpipe_cap(p)
+        return cap if cap is not None else bpipe_cap(p)
     if kind == "bpipe_interleaved":
-        return bpipe_interleaved_cap(p, v)
+        return cap if cap is not None else bpipe_interleaved_cap(p, v)
     return None
 
 
-def build(kind: str, p: int, m: int, v: int = 2) -> Dict[int, Stream]:
+def build(kind: str, p: int, m: int, v: int = 2,
+          cap: int | None = None) -> Dict[int, Stream]:
     fn = SCHEDULES[kind]
+    kw = {}
+    if kind in BPIPE_FAMILY and cap is not None:
+        kw["cap"] = cap
     if kind in INTERLEAVED:
-        return {i: fn(p, m, i, v) for i in range(p)}
-    return {i: fn(p, m, i) for i in range(p)}
+        return {i: fn(p, m, i, v, **kw) for i in range(p)}
+    return {i: fn(p, m, i, **kw) for i in range(p)}
 
 
 # ---------------------------------------------------------------------------
@@ -254,11 +274,14 @@ def stash_trace(streams: Dict[int, Stream], p: int) -> Dict[int, List[int]]:
     return traces
 
 
-def peak_stash(kind: str, p: int, m: int, v: int = 2) -> Dict[int, int]:
+def peak_stash(kind: str, p: int, m: int, v: int = 2,
+               cap: int | None = None) -> Dict[int, int]:
     """Peak per-stage stash count (local + accepted foreign). Units are
     (mb, chunk) — for interleaved kinds each unit holds 1/v of the layers,
     so byte-weighting is the memory model's job (see
-    ``memory_model.act_bytes_per_stage``)."""
-    streams = build(kind, p, m, v)
+    ``memory_model.act_bytes_per_stage``). A non-default BPipe ``cap``
+    shifts stash between evictors and acceptors; this accounting is what
+    the planner's feasibility check consumes."""
+    streams = build(kind, p, m, v, cap)
     traces = stash_trace(streams, p)
     return {i: (max(t) if t else 0) for i, t in traces.items()}

@@ -44,6 +44,7 @@ class SimConfig:
     pair_hops: int = 1
     kind: str = "1f1b"
     v: int = 2                  # chunks per device (interleaved kinds only)
+    cap: Optional[int] = None   # BPipe-family stash-cap override
 
 
 @dataclasses.dataclass
@@ -66,7 +67,7 @@ def simulate(cfg: SimConfig) -> SimResult:
     # One full microbatch of F work per device is Tf regardless of v:
     # each chunk holds 1/v of the device's layers.
     tf, tb = cfg.Tf / v, cfg.Tb / v
-    streams = sched.build(cfg.kind, p, cfg.m, v)
+    streams = sched.build(cfg.kind, p, cfg.m, v, cfg.cap)
     partner = {}
     for a, b_ in sched.bpipe_pairs(p):
         partner[a] = b_

@@ -1,0 +1,113 @@
+"""Schedule auto-planner CLI — the front door to the repo.
+
+    PYTHONPATH=src python -m repro.launch.plan --config llama_65b --hbm-gb 80
+    PYTHONPATH=src python -m repro.launch.plan --config gpt3_96b \
+        --attention recompute --top 12
+    PYTHONPATH=src python -m repro.launch.plan --config qwen3-14b \
+        --trace step.trace.json --trace-b 2
+
+Prints the ranked plan table (every candidate, including OOM-pruned and
+break-even-rejected rows with the required_stage_gain bar they failed)
+and a one-line recommendation per attention arm. Costs come from the
+paper's Table 5 measurements for its two models, an analytic roofline
+guess otherwise, or a real executor trace via --trace.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.configs import get_config, list_configs
+from repro.core.notation import (A100_PEAK_BF16, NVLINK_BW,
+                                 TPU_V5E_ICI_BW, TPU_V5E_PEAK_BF16,
+                                 from_model)
+from repro.planner import (SearchSpace, calibrate, cost_model_for,
+                           plan_config, report)
+
+LINKS = {"nvlink": NVLINK_BW, "ici": TPU_V5E_ICI_BW}
+CHIPS = {"a100": A100_PEAK_BF16, "tpu_v5e": TPU_V5E_PEAK_BF16}
+
+
+def resolve_config(name: str):
+    """Accept registry names and their underscore aliases
+    (gpt3_96b -> gpt3-96b), per the docs' CLI examples."""
+    for cand in (name, name.replace("_", "-"), name.replace("_", ".")):
+        try:
+            return get_config(cand)
+        except KeyError:
+            continue
+    raise SystemExit(f"unknown --config {name!r}; known: {list_configs()}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="rank pipeline-schedule plans for a config")
+    ap.add_argument("--config", required=True,
+                    help="model config name (underscores ok: llama_65b)")
+    ap.add_argument("--hbm-gb", type=float, default=80.0,
+                    help="per-device HBM budget (default: A100-80G)")
+    ap.add_argument("--p", type=int, default=8, help="pipeline stages")
+    ap.add_argument("--t", type=int, default=4, help="tensor-parallel size")
+    ap.add_argument("--B", type=int, default=128, help="global batch")
+    ap.add_argument("--seq", type=int, default=2048)
+    ap.add_argument("--attention", default="",
+                    choices=["", "none", "recompute", "flash"],
+                    help="restrict to one attention arm")
+    ap.add_argument("--link", default="nvlink", choices=sorted(LINKS),
+                    help="evictor<->acceptor link for BPipe traffic")
+    ap.add_argument("--chip", default="a100", choices=sorted(CHIPS))
+    ap.add_argument("--v", type=int, nargs="*", default=[2, 4],
+                    help="interleaved chunks-per-device to search")
+    ap.add_argument("--overhead", type=float, default=0.0,
+                    help="fractional BPipe overhead inflating break-even")
+    ap.add_argument("--top", type=int, default=16,
+                    help="table rows to print (0 = all)")
+    ap.add_argument("--csv", action="store_true",
+                    help="machine-readable rows instead of the table")
+    ap.add_argument("--trace", default="",
+                    help="Chrome-trace JSON from executor step(trace=True); "
+                         "calibrates Tf/Tb instead of Table5/analytic costs")
+    ap.add_argument("--trace-b", type=int, default=1,
+                    help="micro batch size the trace ran at")
+    ap.add_argument("--trace-v", type=int, default=1,
+                    help="chunks per device in the traced run")
+    ap.add_argument("--trace-attention", default="none",
+                    choices=["none", "recompute", "flash"],
+                    help="attention arm the traced run used (other arms "
+                         "are scaled by the analytic time factors)")
+    args = ap.parse_args(argv)
+
+    cfg = resolve_config(args.config)
+    n = from_model(cfg, b=1, s=args.seq, B=args.B, p=args.p, t=args.t)
+    attentions = ((args.attention,) if args.attention
+                  else ("none", "recompute", "flash"))
+    search = SearchSpace(attentions=attentions, vs=tuple(args.v))
+
+    if args.trace:
+        events = calibrate.load_chrome_trace(args.trace)
+        costs = calibrate.fit_trace(events, v=args.trace_v, b=args.trace_b)
+        cost = calibrate.TraceCostModel(costs, peak_per_chip=CHIPS[args.chip],
+                                        attention=args.trace_attention)
+        print(f"# calibrated from {args.trace}: Tf={costs.Tf:.4g}s "
+              f"Tb={costs.Tb:.4g}s ({costs.samples} events)")
+    else:
+        cost = cost_model_for(cfg, CHIPS[args.chip])
+
+    ranked = plan_config(n, cfg, args.hbm_gb * 2**30, cost=cost,
+                         search=search, link_bw=LINKS[args.link],
+                         overhead=args.overhead)
+    if args.csv:
+        for row in report.csv_rows(ranked, "plan", cfg.name):
+            print(row)
+    else:
+        print(f"# {cfg.name}: p={n.p} t={n.t} B={n.B} s={n.s} "
+              f"hbm={args.hbm_gb:.0f}GiB link={args.link} "
+              f"({len(ranked)} candidates)")
+        print(report.format_table(ranked, top=args.top))
+    for line in report.summarize(cfg.name, n, ranked):
+        print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,6 +29,7 @@ and gradients match to fp32 tolerance. BPipe's cap (``bpipe_cap`` /
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -107,11 +108,32 @@ class ActivationStore:
             bytes_moved=self.bytes_moved)
 
 
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    """One executed instruction with wall-clock bounds (seconds, relative
+    to the step start). F/B durations are real device time (the executor
+    blocks on the instruction's outputs while tracing); EVICT/LOAD on a
+    single host are bookkeeping, so their durations record only the
+    store-move overhead. ``planner.calibrate`` fits simulator costs from
+    these and exports them in Chrome trace format."""
+    stage: int
+    op: str
+    mb: int
+    chunk: int
+    start: float
+    end: float
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start
+
+
 @dataclasses.dataclass
 class StepResult:
     loss: jnp.ndarray
     grads: Any
     stats: StoreStats
+    events: Optional[List[TraceEvent]] = None
 
 
 class PipelineExecutor:
@@ -125,13 +147,17 @@ class PipelineExecutor:
       micro_batch: rows per microbatch (global batch must divide evenly).
       v: virtual chunks per device (interleaved kinds only; ignored
         otherwise). Interleaved streams additionally require m % p == 0.
+      cap: BPipe-family stash-cap override (planner-chosen). With a
+        non-default cap the live assertion bounds each stage by the
+        schedule's own per-stage peak accounting (a tighter evictor cap
+        legitimately raises the acceptor's peak above it).
       notation: optional paper-notation override for byte accounting.
     """
 
     def __init__(self, cfg: ModelConfig, p: int, kind: str = "1f1b",
                  micro_batch: int = 1, remat: str = "none",
                  notation: Optional[Notation] = None, enforce_cap: bool = True,
-                 v: int = 2):
+                 v: int = 2, cap: Optional[int] = None):
         assert kind in sched.SCHEDULES, kind
         self.cfg, self.p, self.kind = cfg, p, kind
         self.v = v if kind in sched.INTERLEAVED else 1
@@ -140,7 +166,8 @@ class PipelineExecutor:
         self.b = micro_batch
         self.remat = remat
         self.enforce_cap = enforce_cap
-        self.cap = sched.schedule_cap(kind, p, self.v)
+        self._custom_cap = cap is not None and kind in sched.BPIPE_FAMILY
+        self.cap = sched.schedule_cap(kind, p, self.v, cap)
         # One jitted fn per *virtual* stage, built once: jax.vjp over a
         # stable jitted callable reuses its trace, so repeated step()
         # calls (and every microbatch within a step) compile nothing new.
@@ -154,16 +181,30 @@ class PipelineExecutor:
             self.partner[c] = a
         self.notation = notation
         self._streams: Dict[int, Dict[int, sched.Stream]] = {}  # m -> streams
+        self._bounds: Dict[int, Dict[int, int]] = {}  # m -> per-stage bound
 
     # ------------------------------------------------------------------
     def _streams_for(self, m: int) -> Dict[int, sched.Stream]:
         if m not in self._streams:
             if self.kind in sched.INTERLEAVED:
                 assert m % self.p == 0, (m, self.p)
-            self._streams[m] = sched.build(self.kind, self.p, m, self.v)
+            self._streams[m] = sched.build(self.kind, self.p, m, self.v,
+                                           self.cap if self._custom_cap
+                                           else None)
+            if self.cap is None:
+                bound = {i: None for i in range(self.p)}
+            elif self._custom_cap:
+                # The paper-default caps bound every stage uniformly; a
+                # planner cap only bounds the evictors, so assert against
+                # the schedule's own per-stage accounting instead.
+                bound = sched.peak_stash(self.kind, self.p, m, self.v,
+                                         self.cap)
+            else:
+                bound = {i: self.cap for i in range(self.p)}
+            self._bounds[m] = bound
         return self._streams[m]
 
-    def step(self, params, batch) -> StepResult:
+    def step(self, params, batch, trace: bool = False) -> StepResult:
         cfg, p, v = self.cfg, self.p, self.v
         nv = self.n_virtual
         bsz = batch["tokens"].shape[0]
@@ -179,6 +220,9 @@ class PipelineExecutor:
 
         stage_params = self.splitter.split(params)
         streams = self._streams_for(m)
+        bounds = self._bounds[m]
+        events: Optional[List[TraceEvent]] = [] if trace else None
+        t_step0 = time.perf_counter()
 
         # Slice each microbatch once, not once per (chunk, F) — interleaving
         # visits every microbatch p*v times on this hot path.
@@ -205,6 +249,8 @@ class PipelineExecutor:
                 while idx[i] < len(streams[i]):
                     ins = streams[i][idx[i]]
                     vs = sched.virtual_stage(i, ins.chunk, p)
+                    sync = None
+                    t0 = 0.0
                     if ins.op == F:
                         # pop: the boundary activation has exactly one
                         # consumer; holding it past this F would overhang
@@ -212,6 +258,8 @@ class PipelineExecutor:
                         carry = dummy if vs == 0 else act_in.pop((vs, ins.mb), None)
                         if carry is None:
                             break
+                        if trace:
+                            t0 = time.perf_counter()
                         out, vjp_fn = jax.vjp(
                             self.stage_fns[vs], stage_params[vs], carry,
                             micros[ins.mb])
@@ -220,6 +268,7 @@ class PipelineExecutor:
                             losses[ins.mb] = out
                         else:
                             act_in[(vs + 1, ins.mb)] = out
+                        sync = out
                     elif ins.op == B:
                         if vs == nv - 1:
                             cot = scale
@@ -227,24 +276,39 @@ class PipelineExecutor:
                             cot = grad_in.pop((vs, ins.mb), None)
                             if cot is None:
                                 break
+                        if trace:
+                            t0 = time.perf_counter()
                         vjp_fn = store.pop(i, ins.mb, ins.chunk)
                         d_sp, d_carry, _ = vjp_fn(cot)
                         grads[vs] = d_sp if grads[vs] is None else jax.tree.map(
                             jnp.add, grads[vs], d_sp)
                         if vs > 0:
                             grad_in[(vs - 1, ins.mb)] = d_carry
+                        sync = (d_sp, d_carry)
                     elif ins.op == EVICT:
+                        if trace:
+                            t0 = time.perf_counter()
                         store.evict(i, ins.mb, self.partner[i], ins.chunk)
                     else:  # LOAD
+                        if trace:
+                            t0 = time.perf_counter()
                         store.load(i, ins.mb, self.partner[i], ins.chunk)
+                    if trace:
+                        # Block so the event spans the instruction's real
+                        # device time, not just its async dispatch.
+                        if sync is not None:
+                            jax.block_until_ready(sync)
+                        events.append(TraceEvent(
+                            i, ins.op, ins.mb, ins.chunk,
+                            t0 - t_step0, time.perf_counter() - t_step0))
                     if self.enforce_cap and self.cap is not None:
                         # EVICT/LOAD also touch the partner's store — check
                         # both ends so acceptor-side transients can't hide
                         # behind the acceptor's next pop.
                         for dev in ((i, self.partner[i])
                                     if ins.op in (EVICT, LOAD) else (i,)):
-                            assert store.held(dev) <= self.cap, \
-                                (dev, ins, store.held(dev), self.cap)
+                            assert store.held(dev) <= bounds[dev], \
+                                (dev, ins, store.held(dev), bounds[dev])
                     idx[i] += 1
                     remaining -= 1
                     progressed = True
@@ -252,4 +316,5 @@ class PipelineExecutor:
 
         loss = sum(losses.values()) * scale
         full_grads = self.splitter.merge(grads)
-        return StepResult(loss=loss, grads=full_grads, stats=store.stats())
+        return StepResult(loss=loss, grads=full_grads, stats=store.stats(),
+                          events=events)

@@ -1,0 +1,192 @@
+"""Trace-calibrated simulator costs: fit Tf/Tb/eviction times from the
+executor's per-instruction event trace and replay them through the
+discrete-event simulator.
+
+This closes the paper's §4 loop programmatically: instead of quoting
+measured single-stage MFUs, run the real runtime (``PipelineExecutor``
+with ``step(..., trace=True)``), fit per-op medians, and feed the
+simulator/planner the observed numbers. ``measure_stage_gain`` is the
+paper's "two cheap single-stage measurements" recipe end to end: two
+single-stage (p=1) runs at micro batch sizes by -> bx yield the stage
+gain that ``estimator.required_stage_gain`` weighs against the bubble
+penalty.
+
+Traces export to Chrome trace format (chrome://tracing, Perfetto) and
+round-trip back for offline fitting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import statistics
+from typing import Dict, List, Optional
+
+from repro.core import simulator as SIM
+from repro.core.notation import Notation
+from repro.core.schedule import B, EVICT, F, LOAD
+from repro.planner.rank import AnalyticCostModel, CostModel
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibratedCosts:
+    """Per-device, per-microbatch times (seconds) fit from a trace.
+
+    Tf/Tb are whole-device costs: interleaved traces time 1/v-sized chunk
+    instructions, so the fit multiplies the chunk median back by v —
+    matching ``SimConfig``'s convention (the simulator divides by v
+    again)."""
+    Tf: float
+    Tb: float
+    t_evict: float = 0.0
+    t_load: float = 0.0
+    v: int = 1
+    b: int = 0              # micro batch the trace ran at (0 = unknown)
+    samples: int = 0
+
+    @property
+    def t_move(self) -> float:
+        """One balanced EVICT/LOAD transfer estimate."""
+        pair = [t for t in (self.t_evict, self.t_load) if t > 0]
+        return statistics.mean(pair) if pair else 0.0
+
+
+def fit_trace(events, v: int = 1, b: int = 0) -> CalibratedCosts:
+    """Fit simulator costs from executor ``TraceEvent``s (medians — robust
+    to the odd scheduler hiccup; trace a warmed step, not the compile
+    step)."""
+    by_op: Dict[str, List[float]] = {F: [], B: [], EVICT: [], LOAD: []}
+    for e in events:
+        by_op[e.op].append(e.duration)
+    assert by_op[F] and by_op[B], "trace has no F/B instructions"
+    med = {op: (statistics.median(ds) if ds else 0.0)
+           for op, ds in by_op.items()}
+    return CalibratedCosts(
+        Tf=med[F] * v, Tb=med[B] * v,
+        t_evict=med[EVICT], t_load=med[LOAD],
+        v=v, b=b, samples=len(events))
+
+
+def apply(costs: CalibratedCosts, cfg: SIM.SimConfig) -> SIM.SimConfig:
+    """A SimConfig re-grounded in measured compute times. Eviction traffic
+    keeps its analytic bytes/bandwidth model: on one host the store move
+    is bookkeeping, so its measured duration says nothing about a real
+    pair link."""
+    return dataclasses.replace(cfg, Tf=costs.Tf, Tb=costs.Tb)
+
+
+def replay(costs: CalibratedCosts, kind: str, p: int, m: int, v: int = 2,
+           cap: Optional[int] = None, evict_bytes: float = 0.0,
+           pair_bw: float = float("inf"), pair_hops: int = 1,
+           t_p2p: float = 0.0) -> SIM.SimResult:
+    """Simulate schedule ``kind`` under the fitted costs."""
+    return SIM.simulate(SIM.SimConfig(
+        p=p, m=m, Tf=costs.Tf, Tb=costs.Tb, kind=kind, v=v, cap=cap,
+        evict_bytes=evict_bytes, pair_bw=pair_bw, pair_hops=pair_hops,
+        t_p2p=t_p2p))
+
+
+class TraceCostModel(CostModel):
+    """CostModel anchored at one measured (b, T) point. Other micro batch
+    sizes scale by the saturating-efficiency shape (T(b) proportional to
+    b / eff(b), eff(b) = b/(b+k)) — a one-point version of
+    ``estimator.fit_stage_mfu``'s curve.
+
+    ``attention`` names the arm the trace ran under; other arms scale by
+    the analytic time-factor ratios (a trace taken without recompute says
+    nothing about recompute's re-forward cost, so the model must charge
+    it rather than rank all arms at the traced time)."""
+
+    def __init__(self, costs: CalibratedCosts, k: float = 0.25,
+                 peak_per_chip: float = None, attention: str = "none"):
+        assert costs.b > 0, "trace must record its micro batch size b"
+        self.costs = costs
+        self.k = k
+        self._factors = AnalyticCostModel.TIME_FACTOR
+        self.traced_attention = attention
+        assert attention in self._factors, attention
+        if peak_per_chip is not None:
+            self.peak_per_chip = peak_per_chip
+
+    def stage_T(self, n: Notation, attention: str) -> float:
+        b0, b = self.costs.b, n.b
+        T0 = self.costs.Tf + self.costs.Tb
+        eff0 = b0 / (b0 + self.k)
+        eff = b / (b + self.k)
+        arm = (self._factors[attention]
+               / self._factors[self.traced_attention])
+        return T0 * (b / b0) * (eff0 / eff) * arm
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace round trip
+# ---------------------------------------------------------------------------
+def chrome_trace(events) -> dict:
+    """Chrome trace format (complete 'X' events, microsecond timestamps);
+    one tid per pipeline stage."""
+    out = []
+    for e in events:
+        out.append({
+            "name": f"{e.op}{e.mb}" + (f".c{e.chunk}" if e.chunk else ""),
+            "cat": e.op, "ph": "X",
+            "ts": e.start * 1e6, "dur": e.duration * 1e6,
+            "pid": 0, "tid": e.stage,
+            "args": {"mb": e.mb, "chunk": e.chunk},
+        })
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+def save_chrome_trace(events, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(chrome_trace(events), f)
+
+
+def load_chrome_trace(path: str):
+    """Parse a saved Chrome trace back into ``TraceEvent``s."""
+    from repro.pipeline.executor import TraceEvent
+    with open(path) as f:
+        doc = json.load(f)
+    events = []
+    for rec in doc["traceEvents"]:
+        if rec.get("ph") != "X":
+            continue
+        start = rec["ts"] / 1e6
+        events.append(TraceEvent(
+            stage=int(rec["tid"]), op=rec["cat"],
+            mb=int(rec["args"]["mb"]), chunk=int(rec["args"]["chunk"]),
+            start=start, end=start + rec["dur"] / 1e6))
+    return events
+
+
+# ---------------------------------------------------------------------------
+# The §4 recipe: two cheap single-stage measurements
+# ---------------------------------------------------------------------------
+def measure_stage_T(cfg, b: int, seq: int = 32, m: int = 2,
+                    remat: str = "none"):
+    """Run ONE pipeline stage (p=1, the whole model) for m microbatches of
+    size b and return (T, costs): T = median F + median B seconds. The
+    first (compile) step is discarded; the second is traced."""
+    import jax
+    from repro.models import model as M
+    from repro.pipeline.executor import PipelineExecutor
+
+    ex = PipelineExecutor(cfg, p=1, kind="1f1b", micro_batch=b, remat=remat)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (m * b, seq + 1),
+                              0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    ex.step(params, batch)                       # warm / compile
+    res = ex.step(params, batch, trace=True)
+    costs = fit_trace(res.events, v=1, b=b)
+    return costs.Tf + costs.Tb, costs
+
+
+def measure_stage_gain(cfg, bx: int, by: int, seq: int = 32, m: int = 2,
+                       remat: str = "none") -> dict:
+    """The paper's decision procedure, measured: stage gain
+    MFU_stage(bx)/MFU_stage(by) = (bx/T(bx)) / (by/T(by)). Compare with
+    ``estimator.required_stage_gain`` before writing any BPipe code."""
+    Tx, cx = measure_stage_T(cfg, bx, seq, m, remat)
+    Ty, cy = measure_stage_T(cfg, by, seq, m, remat)
+    return {"bx": bx, "by": by, "Tx": Tx, "Ty": Ty,
+            "gain": (bx / Tx) / (by / Ty),
+            "costs_x": cx, "costs_y": cy}

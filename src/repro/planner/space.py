@@ -1,0 +1,119 @@
+"""The planner's search space: candidate (kind, v, b, m, cap, attention)
+plans for one (model, p, t, B, s) training configuration.
+
+A candidate is everything the user would otherwise pick by hand per
+config. Enumeration applies only *structural* constraints (b | B,
+interleaving's m % p == 0 and v >= 2, p*v <= num_layers, cap >= 2);
+memory pruning is ``planner.feasibility``'s job and cost ranking is
+``planner.rank``'s, so each stage of the funnel is testable alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional, Tuple
+
+from repro.core import schedule as sched
+from repro.core.notation import Notation
+
+ATTENTION_ARMS = ("none", "recompute", "flash")
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the search space.
+
+    ``cap`` is None for non-BPipe kinds and for the BPipe default bound
+    (``schedule_cap``); a planner-chosen override otherwise. ``v`` is 1
+    for plain kinds.
+    """
+    kind: str
+    b: int
+    m: int
+    v: int = 1
+    cap: Optional[int] = None
+    attention: str = "recompute"
+
+    def label(self) -> str:
+        bits = [self.kind, f"b={self.b}", f"m={self.m}"]
+        if self.kind in sched.INTERLEAVED:
+            bits.append(f"v={self.v}")
+        if self.cap is not None:
+            bits.append(f"cap={self.cap}")
+        bits.append(self.attention)
+        return " ".join(bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    """Which axes to sweep. Defaults mirror the paper's experiment grid
+    plus the beyond-paper interleaved kinds."""
+    kinds: Tuple[str, ...] = ("1f1b", "bpipe",
+                              "1f1b_interleaved", "bpipe_interleaved")
+    attentions: Tuple[str, ...] = ATTENTION_ARMS
+    vs: Tuple[int, ...] = (2, 4)
+    # Offsets from the schedule's default cap. 0 first so ties between
+    # equivalent caps resolve to the paper's bound; +k trades evictor
+    # memory for less eviction traffic, -k the reverse.
+    cap_deltas: Tuple[int, ...] = (0, 1, -1)
+    max_b: int = 0          # 0 = up to B
+
+
+def micro_batch_sizes(B: int, max_b: int = 0) -> List[int]:
+    """Power-of-two micro batch sizes dividing B (the paper's ladder)."""
+    out, b = [], 1
+    while b <= B and (not max_b or b <= max_b):
+        if B % b == 0:
+            out.append(b)
+        b *= 2
+    return out
+
+
+def _caps_for(kind: str, p: int, v: int, deltas: Tuple[int, ...],
+              m: int) -> List[Optional[int]]:
+    default = sched.schedule_cap(kind, p, v)
+    caps: List[Optional[int]] = []
+    seen = set()
+    # Anything at or above the plain-schedule peak never evicts — the
+    # candidate degenerates to its non-BPipe twin, so clamp there
+    # (stage-0 peak closed forms from docs/schedules.md).
+    if kind == "bpipe":
+        roof = max(min(p, m), 2)
+    else:
+        roof = max(sched.interleaved_peak(p, m, 0, v), 2)
+    for d in deltas:
+        cap = min(max(default + d, 2), roof)
+        if cap in seen:
+            continue
+        seen.add(cap)
+        caps.append(None if cap == default else cap)
+    return caps
+
+
+def enumerate_candidates(n: Notation, space: SearchSpace = SearchSpace(),
+                         num_layers: int = 0) -> Iterator[Candidate]:
+    """Yield every structurally valid candidate for Notation ``n``
+    (attention arms x kinds x b x v x cap). ``num_layers`` (0 = skip the
+    check) bounds p*v for interleaved kinds."""
+    p = n.p
+    for attention in space.attentions:
+        for b in micro_batch_sizes(n.B, space.max_b):
+            m = n.B // b
+            for kind in space.kinds:
+                assert kind in sched.SCHEDULES, kind
+                interleaved = kind in sched.INTERLEAVED
+                vs = space.vs if interleaved else (1,)
+                for v in vs:
+                    if interleaved:
+                        if v < 2 or m % p != 0:
+                            continue
+                        if num_layers and p * v > num_layers:
+                            continue
+                    elif num_layers and p > num_layers:
+                        continue
+                    if kind in sched.BPIPE_FAMILY:
+                        caps = _caps_for(kind, p, v, space.cap_deltas, m)
+                    else:
+                        caps = [None]
+                    for cap in caps:
+                        yield Candidate(kind=kind, b=b, m=m, v=v, cap=cap,
+                                        attention=attention)

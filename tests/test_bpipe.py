@@ -29,6 +29,33 @@ def test_pairing_is_involution(p):
         assert a + b == p - 1
 
 
+def test_hop_distance_on_larger_device_ring():
+    """Regression: hop distances must use the device-ring extent, not p.
+
+    4 stages on an 8-device ring, pairs placed at the ring's wrap seam:
+    the old p-sized default computed min(7, 4-7) = -3 for the (0, 3)
+    pair. On the 8-ring both pairs are 1 hop apart."""
+    plan = BP.plan(4, 16, stage_to_device=(0, 3, 4, 7))
+    assert BP.ring_extent(plan) == 8
+    hops = BP.hop_distance(plan)
+    assert hops == {(0, 3): 1, (1, 2): 1}, hops
+    assert all(h >= 0 for h in hops.values())
+    # an explicit ring_size still wins
+    assert BP.hop_distance(plan, ring_size=16) == {(0, 3): 7, (1, 2): 1}
+
+
+@given(st.integers(2, 16), st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_hop_distance_nonnegative_on_any_ring(p, stride):
+    """Stages strided across a mesh axis stride x larger than p: every
+    pair distance is a valid ring distance (0 <= d <= ring//2)."""
+    layout = tuple(i * stride for i in BP.pair_adjacent_layout(p))
+    plan = BP.plan(p, 4 * p, stage_to_device=layout)
+    ring = BP.ring_extent(plan)
+    for (a, b), d in BP.hop_distance(plan).items():
+        assert 0 <= d <= ring // 2, (p, stride, a, b, d)
+
+
 def test_plan_matches_schedule_evictions():
     plan = BP.plan(8, 64)
     assert plan.cap == S.bpipe_cap(8)
