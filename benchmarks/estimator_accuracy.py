@@ -9,6 +9,7 @@ Columns: p, B, bx/by, t_move_rel (transfer/Tf), eq4, simulated, err_pct.
 from __future__ import annotations
 
 from repro.core import estimator as E
+from repro.core import plan as P
 from repro.core import simulator as SIM
 from repro.core.notation import Notation
 
@@ -19,7 +20,7 @@ GRID_TMOVE = (0.0, 1.0, 4.0)  # transfer time relative to Tf
 
 
 def simulate_mfu(p, m, Tf, kind, t_move):
-    cfg = SIM.SimConfig(p=p, m=m, Tf=Tf, Tb=2 * Tf, kind=kind,
+    cfg = SIM.SimConfig(spec=P.ScheduleSpec(kind, p, m), Tf=Tf, Tb=2 * Tf,
                         evict_bytes=t_move * Tf, pair_bw=1.0)
     res = SIM.simulate(cfg)
     return 1.0 / res.makespan, res

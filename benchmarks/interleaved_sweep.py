@@ -11,7 +11,7 @@ cap_units, load_stall.
 """
 from __future__ import annotations
 
-from repro.core import schedule as S
+from repro.core import plan as P
 from repro.core import simulator as SIM
 
 GRID = [(4, 16), (8, 32), (16, 64)]
@@ -19,13 +19,13 @@ VS = (2, 4)
 
 
 def _row(kind, p, m, v, t_move_rel=0.0):
-    cfg = SIM.SimConfig(p=p, m=m, Tf=1.0, Tb=2.0, kind=kind, v=v,
-                        evict_bytes=t_move_rel, pair_bw=1.0 if t_move_rel else float("inf"))
-    res = SIM.simulate(cfg)
-    peaks = S.peak_stash(kind, p, m, v)
-    units = max(peaks.values())
-    layer_eq = units / (v if kind in S.INTERLEAVED else 1)
-    cap = S.schedule_cap(kind, p, v)
+    spec = P.ScheduleSpec(kind, p, m, v=v)
+    res = SIM.simulate(SIM.SimConfig(
+        spec=spec, Tf=1.0, Tb=2.0, evict_bytes=t_move_rel,
+        pair_bw=1.0 if t_move_rel else float("inf")))
+    units = max(P.compile_plan(spec).peak_stash.values())
+    layer_eq = units / spec.v
+    cap = spec.resolved_cap
     return (kind, res.makespan, res.bubble_fraction, units, layer_eq,
             cap if cap is not None else "-", res.load_stall)
 

@@ -7,6 +7,7 @@ from __future__ import annotations
 
 from repro.core import memory_model as MM
 from repro.core.notation import A100_HBM_BYTES, GPT3_96B, LLAMA_65B
+from repro.core.plan import ScheduleSpec
 
 CASES = [
     ("gpt3-96b", GPT3_96B, "recompute", (1, 2)),
@@ -21,9 +22,11 @@ def main(print_csv=True, smoke=False):
     for name, n, att, bs in (CASES[:1] if smoke else CASES):
         for b in bs:
             for kind in ("1f1b", "bpipe"):
-                mems = MM.per_stage_memory(n.replace(b=b), att, kind)
+                # unbound spec template: the memory model binds m = B/b
+                spec = ScheduleSpec(kind, n.p)
+                mems = MM.per_stage_memory(n.replace(b=b), att, spec)
                 total = [m.total / 2**30 for m in mems]
-                fits = MM.fits(n.replace(b=b), att, kind, A100_HBM_BYTES)
+                fits = MM.fits(n.replace(b=b), att, spec, A100_HBM_BYTES)
                 rows.append((name, att, b, kind, total, fits))
                 if print_csv:
                     stages = "/".join(f"{t:.0f}" for t in total)

@@ -1,6 +1,7 @@
 """Benchmark orchestrator — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--smoke] [--only NAME]
+                                            [--json PATH]
 
 Prints ``name,...`` CSV rows:
   table3             paper Table 3 (MFU, all 10 experiments, +TPU variant)
@@ -14,12 +15,20 @@ Prints ``name,...`` CSV rows:
 
 ``--smoke`` runs every benchmark on tiny CPU-only shapes (subset grids,
 the two smallest configs for the planner) so the whole suite doubles as
-an offline regression check — scripts/check.sh wires it in.
+an offline regression check — scripts/check.sh wires it in. Smoke runs
+also write a machine-readable ``BENCH_smoke.json`` (per-benchmark status,
+wall time, and the CSV rows) so CI runs leave comparable perf-trajectory
+data points; ``--json PATH`` overrides the destination (or enables it
+for non-smoke runs).
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
+import io
+import json
 import sys
+import time
 import traceback
 
 
@@ -29,7 +38,11 @@ def main(argv=None) -> None:
                     help="tiny configs, CPU-only, seconds not minutes")
     ap.add_argument("--only", default="",
                     help="run a single benchmark by name")
+    ap.add_argument("--json", default="",
+                    help="write per-benchmark results as JSON here "
+                         "(default: BENCH_smoke.json when --smoke)")
     args = ap.parse_args(argv)
+    json_path = args.json or ("BENCH_smoke.json" if args.smoke else "")
 
     from benchmarks import (estimator_accuracy, interleaved_sweep,
                             kernel_bench, memory_balance, planner_sweep,
@@ -50,13 +63,31 @@ def main(argv=None) -> None:
                      f"known: {sorted(mods)}")
         mods = {args.only: mods[args.only]}
     ok = True
-    for mod in mods.values():
+    results = []
+    for name, mod in mods.items():
+        # Capture the benchmark's CSV rows while still printing them, so
+        # the JSON report carries the same machine-readable data.
+        buf = io.StringIO()
+        t0 = time.perf_counter()
+        status = "ok"
         try:
-            mod.main(smoke=args.smoke)
+            with contextlib.redirect_stdout(buf):
+                mod.main(smoke=args.smoke)
         except Exception:  # noqa: BLE001
             ok = False
+            status = "fail"
             print(f"BENCH_FAIL,{mod.__name__}", file=sys.stderr)
             traceback.print_exc()
+        out = buf.getvalue()
+        sys.stdout.write(out)
+        results.append({
+            "benchmark": name, "status": status,
+            "seconds": round(time.perf_counter() - t0, 4),
+            "rows": [ln for ln in out.splitlines() if ln.strip()],
+        })
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"smoke": args.smoke, "results": results}, f, indent=1)
     if not ok:
         sys.exit(1)
 

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 from repro.core import estimator as E
 from repro.core import memory_model as MM
+from repro.core import plan as P
 from repro.core import simulator as SIM
 from repro.core.estimator import PAPER_ROWS
 from repro.core.flops import paper_flops, stage_flops
@@ -32,9 +33,9 @@ def row_mfu(row, link_bw: float) -> dict:
     # (a stage is a t-GPU group => per-stage peak is t x chip peak)
     T = E.stage_T_from_mfu(n, Fs, row.mfu_stage / 100.0,
                            A100_PEAK_BF16 * n.t)
-    kind = "bpipe" if row.bpipe else "1f1b"
+    spec = P.ScheduleSpec("bpipe" if row.bpipe else "1f1b", n.p, n.num_micro)
     sim_cfg = SIM.SimConfig(
-        p=n.p, m=n.num_micro, Tf=T / 3.0, Tb=2.0 * T / 3.0, kind=kind,
+        spec=spec, Tf=T / 3.0, Tb=2.0 * T / 3.0,
         evict_bytes=MM.eviction_bytes(n, row.attention),
         pair_bw=link_bw, pair_hops=1)
     res = SIM.simulate(sim_cfg)

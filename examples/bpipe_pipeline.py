@@ -29,6 +29,7 @@ import jax.numpy as jnp  # noqa: E402
 from repro.configs import get_config  # noqa: E402
 from repro.configs.base import TrainConfig  # noqa: E402
 from repro.core import schedule as S  # noqa: E402
+from repro.core.plan import ScheduleSpec  # noqa: E402
 from repro.data.pipeline import DataConfig, make_batch  # noqa: E402
 from repro.models import model as M  # noqa: E402
 from repro.optim import adam  # noqa: E402
@@ -79,23 +80,23 @@ def main():
           f"BPipe cap = ceil((p+2)/2) = {S.bpipe_cap(p)}, "
           f"interleaved (v={args.v}) cap = {S.bpipe_interleaved_cap(p, args.v)}")
 
-    caps = {}
+    # Each variant is a first-class ScheduleSpec: the executor, simulator
+    # and planner all consume the same compiled plan object.
     if args.plan == "auto":
         best = auto_plan(cfg, p, args.v, 8, 32)
         assert best is not None, "no feasible plan under the toy budget"
-        kinds = [best.cand.kind]
         args.micro = best.cand.b
-        args.v = max(best.cand.v, 2)
-        caps[best.cand.kind] = best.cand.cap
         m = 8 // args.micro
+        specs = [best.cand.spec(p)]
     else:
         kinds = ["gpipe", "1f1b", "bpipe"]
         # interleaved streams need m to be a multiple of p and v >= 2
         if m % p == 0 and args.v >= 2:
             kinds += ["1f1b_interleaved", "bpipe_interleaved"]
-    for kind in kinds:
-        ex = PipelineExecutor(cfg, p=p, kind=kind, micro_batch=args.micro,
-                              v=args.v, cap=caps.get(kind))
+        specs = [ScheduleSpec(kind, p, m, v=args.v) for kind in kinds]
+    for spec in specs:
+        kind = spec.kind
+        ex = PipelineExecutor(cfg, spec=spec, micro_batch=args.micro)
         params_k, opt = params, adam.init(params)
         losses = []
         stats = None
@@ -116,10 +117,8 @@ def main():
         if events:
             # close the loop: trace -> recalibrate -> simulate
             from repro.planner import calibrate
-            ev = ex.v if kind in S.INTERLEAVED else 1
-            costs = calibrate.fit_trace(events, v=ev, b=args.micro)
-            replayed = calibrate.replay(costs, kind, p, m, v=ex.v,
-                                        cap=caps.get(kind))
+            costs = calibrate.fit_trace(events, v=ex.v, b=args.micro)
+            replayed = calibrate.replay(costs, spec)
             print(f"        recalibrated from trace: Tf={costs.Tf*1e3:.1f}ms "
                   f"Tb={costs.Tb*1e3:.1f}ms -> simulated step "
                   f"{replayed.makespan*1e3:.0f}ms "

@@ -11,7 +11,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.schedule import bpipe_cap, bpipe_pairs, num_evictions
+from repro.core import plan as P
+from repro.core.schedule import bpipe_pairs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,14 +50,20 @@ def pair_adjacent_layout(p: int) -> List[int]:
 
 
 def plan(p: int, m: int,
-         stage_to_device: Optional[Tuple[int, ...]] = None) -> BPipePlan:
+         stage_to_device: Optional[Tuple[int, ...]] = None,
+         spec: Optional[P.ScheduleSpec] = None) -> BPipePlan:
     """BPipe plan for p stages / m microbatches. ``stage_to_device``
     overrides the pair-adjacent default — e.g. when the stages are laid
-    onto a mesh axis larger than p."""
+    onto a mesh axis larger than p. ``spec`` selects the exact balanced
+    variant (interleaved kind, cap override) so the eviction counts match
+    the stream actually built; default is plain BPipe at the paper cap."""
+    spec = spec or P.ScheduleSpec("bpipe", p, m)
+    assert spec.balanced and (spec.p, spec.m) == (p, m), spec
+    compiled = P.compile_plan(spec)
     return BPipePlan(
-        p=p, m=m, cap=bpipe_cap(p),
+        p=p, m=m, cap=spec.resolved_cap,
         pairs=tuple(bpipe_pairs(p)),
-        evictions=tuple(num_evictions(p, m, i) for i in range(p)),
+        evictions=tuple(compiled.num_evictions[i] for i in range(p)),
         stage_to_device=(tuple(stage_to_device) if stage_to_device is not None
                          else tuple(pair_adjacent_layout(p))),
     )

@@ -20,13 +20,28 @@ configuration, matching the paper's setup).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Union
 
 from repro.configs.base import ModelConfig
+from repro.core import plan as P
 from repro.core import schedule as sched
 from repro.core.notation import Notation
 
 BYTES_PER_PARAM = 18.0
+
+#: Schedule selector: a compiled-plan ``ScheduleSpec`` (preferred) or a
+#: legacy kind name combined with the (v, cap) knob arguments.
+KindOrSpec = Union[str, P.ScheduleSpec]
+
+
+def _as_spec(kind: KindOrSpec, n: Notation, v: int = 1,
+             cap: int = None) -> P.ScheduleSpec:
+    """Normalize the legacy (kind, v, cap) knobs to a bound spec; a spec
+    passed directly wins (its m is bound from the notation if unbound)."""
+    if isinstance(kind, P.ScheduleSpec):
+        assert kind.p == n.p, f"spec p={kind.p} != notation p={n.p}"
+        return kind if kind.bound else kind.with_m(n.num_micro)
+    return P.ScheduleSpec(kind, n.p, n.num_micro, v=max(v, 1), cap=cap)
 
 
 def act_bytes_per_layer(n: Notation, attention: str) -> float:
@@ -72,19 +87,16 @@ class StageMemory:
         return self.act_bytes + self.param_bytes
 
 
-def per_stage_memory(n: Notation, attention: str, kind: str,
+def per_stage_memory(n: Notation, attention: str, kind: KindOrSpec,
                      cfg: ModelConfig = None, v: int = 1,
                      cap: int = None) -> List[StageMemory]:
-    """Peak memory per pipeline stage under schedule ``kind``. For
-    interleaved kinds pass v >= 2: stash-unit counts come from the
-    v-chunk streams and each unit is byte-weighted at 1/v of the
-    device's layers. ``cap`` overrides the BPipe-family stash bound
-    (the planner's cap search dimension)."""
-    if kind in sched.INTERLEAVED:
-        assert v >= 2, (kind, v)
-    m = n.num_micro
-    peaks = sched.peak_stash(kind, n.p, m, v, cap)
-    per_mb = act_bytes_per_stage(n, attention, v if kind in sched.INTERLEAVED else 1)
+    """Peak memory per pipeline stage under the given schedule variant
+    (a ``ScheduleSpec``, or the legacy kind/v/cap knobs). Stash-unit
+    counts come from the compiled plan's peak accounting; for interleaved
+    kinds each unit is byte-weighted at 1/v of the device's layers."""
+    spec = _as_spec(kind, n, v, cap)
+    peaks = P.compile_plan(spec).peak_stash
+    per_mb = act_bytes_per_stage(n, attention, spec.v)
     pb = param_bytes_per_stage(n, cfg)
     out = []
     for i in range(n.p):
@@ -94,14 +106,14 @@ def per_stage_memory(n: Notation, attention: str, kind: str,
     return out
 
 
-def max_stage_bytes(n: Notation, attention: str, kind: str,
+def max_stage_bytes(n: Notation, attention: str, kind: KindOrSpec,
                     cfg: ModelConfig = None, v: int = 1,
                     cap: int = None) -> float:
     return max(s.total
                for s in per_stage_memory(n, attention, kind, cfg, v, cap))
 
 
-def fits(n: Notation, attention: str, kind: str, device_bytes: float,
+def fits(n: Notation, attention: str, kind: KindOrSpec, device_bytes: float,
          cfg: ModelConfig = None, workspace: float = 4 * 1024**3,
          v: int = 1, cap: int = None) -> bool:
     """Does every stage fit in device memory (leaving CUDA/XLA workspace)?"""
@@ -135,6 +147,15 @@ def eviction_bytes(n: Notation, attention: str, v: int = 1) -> float:
     """Bytes moved per EVICT/LOAD (one stash unit: a microbatch's stage
     stash, or 1/v of it for interleaved kinds)."""
     return act_bytes_per_stage(n, attention, v)
+
+
+def traffic_bytes(n: Notation, attention: str, spec: P.ScheduleSpec) -> float:
+    """Total evictor<->acceptor bytes one step of ``spec`` moves: the
+    EVICT+LOAD count of the stream actually built (``plan.num_moves`` —
+    cap- and v-aware) times the per-unit stash bytes. 0 for unbalanced
+    kinds."""
+    spec = _as_spec(spec, n)
+    return P.num_moves(spec) * eviction_bytes(n, attention, spec.v)
 
 
 def balance_report(n: Notation, attention: str) -> Dict[str, List[float]]:

@@ -1,0 +1,424 @@
+"""Compiled schedule plans: the one place a pipeline schedule is turned
+from a name-plus-knobs into an executable artifact.
+
+The paper's whole argument is a comparison across schedule variants, so a
+variant must be a *value*, not a loose ``(kind, p, m, v, cap)`` tuple
+re-threaded through every module. Following the plan-as-artifact designs
+of Alpa (compile the parallel plan once, hand it to every consumer) and
+Megatron-LM's schedule registry:
+
+  * ``ScheduleSpec`` — the typed, validated, hashable identity of a
+    schedule variant. Everything downstream (simulator, executor, memory
+    model, planner, benchmarks) speaks specs.
+  * ``compile_plan(spec) -> Schedule`` — compiled ONCE (lru-cached on the
+    spec): per-stage instruction streams with each instruction's resolved
+    upstream dependency edge and device hop, the evictor/acceptor partner
+    map, per-stage stash bounds, eviction/load counts, and peak-stash
+    accounting. Consumers stop re-deriving any of this per call.
+  * ``run(streams, handlers)`` — the single generic ready-instruction
+    dispatch loop (with deadlock detection). The discrete-event simulator,
+    the executable runtime, and the stash accounting are all handler sets
+    over this engine; none of them owns a scheduling loop anymore.
+
+Adding a schedule kind is one declarative ``schedule.register(...)`` call
+(stream builder + flags + cap formulas); it is then compilable, plannable,
+simulable, and executable with no interpreter edits. See docs/api.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple)
+
+from repro.core import schedule as sched
+from repro.core.schedule import B, EVICT, F, LOAD, Instr
+
+# Dependency edge: completion of (op, stage, mb, chunk) upstream.
+DepKey = Tuple[str, int, int, int]
+
+
+# ---------------------------------------------------------------------------
+# ScheduleSpec — the schedule variant as a value
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ScheduleSpec:
+    """Identity of one pipeline-schedule variant.
+
+    Fields:
+      kind: registered schedule kind (``schedule.SCHEDULES``).
+      p:    pipeline stages (devices).
+      m:    microbatches per step. ``m=0`` leaves the spec *unbound* — a
+            template the executor binds to the real batch at ``step()``
+            (``with_m``); compiling requires a bound spec.
+      v:    virtual chunks per device; normalized to 1 for plain kinds.
+      cap:  stash-cap override for balanced (BPipe-family) kinds;
+            normalized to None when it equals the kind's default bound
+            (and for kinds that take no cap), so two spellings of the
+            same variant hash and compare equal.
+
+    Specs are frozen and hashable — they key the compile cache and can be
+    used as dict keys / set members anywhere a "schedule variant" is
+    meant.
+    """
+    kind: str
+    p: int
+    m: int = 0
+    v: int = 1
+    cap: Optional[int] = None
+
+    def __post_init__(self):
+        entry = sched.SCHEDULES.get(self.kind)
+        if entry is None:
+            raise ValueError(
+                f"unknown schedule kind {self.kind!r}; "
+                f"registered: {sorted(sched.SCHEDULES)}")
+        if self.p < 1:
+            raise ValueError(f"p must be >= 1, got {self.p}")
+        if self.m < 0:
+            raise ValueError(f"m must be >= 0, got {self.m}")
+        if entry.interleaved:
+            if self.v < 2:
+                raise ValueError(
+                    f"{self.kind} needs v >= 2 chunks, got v={self.v}")
+            if self.m and self.m % self.p:
+                raise ValueError(
+                    f"{self.kind} needs m % p == 0, got m={self.m} p={self.p}")
+        else:
+            # plain kinds have exactly one chunk; normalize so the spec's
+            # identity doesn't depend on a meaningless v knob
+            object.__setattr__(self, "v", 1)
+        if entry.balanced:
+            if self.cap is not None:
+                if self.cap < 2:
+                    raise ValueError(
+                        f"cap must be >= 2 (one live forward + the "
+                        f"in-flight LOAD transient), got {self.cap}")
+                if self.cap == entry.default_cap(self.p, self.v):
+                    object.__setattr__(self, "cap", None)
+        else:
+            object.__setattr__(self, "cap", None)
+
+    # -- derived identity ------------------------------------------------
+    @property
+    def entry(self) -> "sched.ScheduleKind":
+        return sched.SCHEDULES[self.kind]
+
+    @property
+    def interleaved(self) -> bool:
+        return self.entry.interleaved
+
+    @property
+    def balanced(self) -> bool:
+        return self.entry.balanced
+
+    @property
+    def n_virtual(self) -> int:
+        return self.p * self.v
+
+    @property
+    def resolved_cap(self) -> Optional[int]:
+        """The effective per-device stash bound (None = unbounded)."""
+        if not self.balanced:
+            return None
+        return self.cap if self.cap is not None \
+            else self.entry.default_cap(self.p, self.v)
+
+    @property
+    def bound(self) -> bool:
+        return self.m > 0
+
+    def with_m(self, m: int) -> "ScheduleSpec":
+        """Bind (or re-bind) the microbatch count."""
+        return dataclasses.replace(self, m=m)
+
+    # -- presentation / serialization -------------------------------------
+    def label(self) -> str:
+        bits = [self.kind, f"p={self.p}", f"m={self.m}"]
+        if self.interleaved:
+            bits.append(f"v={self.v}")
+        if self.balanced:
+            bits.append(f"cap={self.cap if self.cap is not None else 'def'}")
+        return " ".join(bits)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "p": self.p, "m": self.m,
+                "v": self.v, "cap": self.cap}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ScheduleSpec":
+        return cls(kind=d["kind"], p=int(d["p"]), m=int(d.get("m", 0)),
+                   v=int(d.get("v", 1)),
+                   cap=None if d.get("cap") is None else int(d["cap"]))
+
+
+# ---------------------------------------------------------------------------
+# Compiled instructions
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PlannedInstr:
+    """One schedule instruction with its dispatch context resolved at
+    compile time: the virtual stage it runs on, the upstream completion
+    it waits for (``dep``), and whether that dependency crosses a device
+    boundary (``dep_hop`` — the p2p transfer the simulator charges and a
+    multi-host runtime would device_put)."""
+    op: str
+    stage: int
+    mb: int
+    chunk: int
+    vs: int                        # virtual stage = chunk * p + stage
+    dep: Optional[DepKey] = None   # (op, stage, mb, chunk) upstream
+    dep_hop: bool = False
+
+    @property
+    def key(self) -> Tuple[int, int, int]:
+        return (self.stage, self.mb, self.chunk)
+
+    @property
+    def done_key(self) -> DepKey:
+        """The completion record this instruction publishes."""
+        return (self.op, self.stage, self.mb, self.chunk)
+
+    def as_instr(self) -> Instr:
+        return Instr(self.op, self.mb, self.chunk)
+
+    def __repr__(self):
+        c = f".c{self.chunk}" if self.chunk else ""
+        return f"{self.op}{self.mb}{c}@{self.stage}"
+
+
+def _plan_stream(spec: ScheduleSpec, stage: int,
+                 raw: Sequence[Instr]) -> Tuple[PlannedInstr, ...]:
+    """Resolve each raw instruction's dependency edge and device hop."""
+    p, nv = spec.p, spec.n_virtual
+    out: List[PlannedInstr] = []
+    for ins in raw:
+        vs = sched.virtual_stage(stage, ins.chunk, p)
+        dep: Optional[DepKey] = None
+        hop = False
+        if ins.op == F:
+            if vs > 0:
+                pi, pc = (vs - 1) % p, (vs - 1) // p
+                dep = (F, pi, ins.mb, pc)
+                hop = pi != stage
+        elif ins.op == B:
+            if vs == nv - 1:
+                dep = (F, stage, ins.mb, ins.chunk)   # own forward
+            else:
+                ni, nc = (vs + 1) % p, (vs + 1) // p
+                dep = (B, ni, ins.mb, nc)
+                hop = ni != stage
+        elif ins.op == EVICT:
+            dep = (F, stage, ins.mb, ins.chunk)
+        elif ins.op == LOAD:
+            dep = (EVICT, stage, ins.mb, ins.chunk)
+        else:
+            raise ValueError(f"unknown op {ins.op!r}")
+        out.append(PlannedInstr(ins.op, stage, ins.mb, ins.chunk, vs,
+                                dep, hop))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# The compiled artifact
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Everything a schedule consumer needs, computed once per spec.
+
+    ``streams`` carry resolved deps/hops; ``partner`` is the BPipe
+    evictor<->acceptor map (empty for unbalanced kinds); ``cap`` is the
+    resolved uniform bound (None = unbounded); ``bounds`` the per-stage
+    live-store assertion bound the executor enforces (the schedule's own
+    per-stage peak under a custom cap — a tighter evictor cap
+    legitimately raises the acceptor's peak above the uniform number);
+    ``peak_stash`` the per-stage peak unit count (local + accepted
+    foreign) that feeds the memory model and planner feasibility;
+    ``num_evictions``/``num_loads`` the per-stage move counts that feed
+    traffic accounting.
+    """
+    spec: ScheduleSpec
+    streams: Mapping[int, Tuple[PlannedInstr, ...]]
+    partner: Mapping[int, int]
+    cap: Optional[int]
+    bounds: Mapping[int, Optional[int]]
+    peak_stash: Mapping[int, int]
+    num_evictions: Mapping[int, int]
+    num_loads: Mapping[int, int]
+
+    @property
+    def p(self) -> int:
+        return self.spec.p
+
+    @property
+    def n_virtual(self) -> int:
+        return self.spec.n_virtual
+
+    @property
+    def size(self) -> int:
+        return sum(len(s) for s in self.streams.values())
+
+    @property
+    def moves(self) -> int:
+        """Total EVICT + LOAD instructions over one step."""
+        return (sum(self.num_evictions.values())
+                + sum(self.num_loads.values()))
+
+    def instr_streams(self) -> Dict[int, List[Instr]]:
+        """The raw-``Instr`` view (the pre-compile IR, for legacy callers
+        and stream-shape tests)."""
+        return {i: [pi.as_instr() for pi in s]
+                for i, s in self.streams.items()}
+
+
+def partner_map(p: int) -> Dict[int, int]:
+    """BPipe evictor<->acceptor pairing as a symmetric map."""
+    out: Dict[int, int] = {}
+    for a, b in sched.bpipe_pairs(p):
+        out[a] = b
+        out[b] = a
+    return out
+
+
+@functools.lru_cache(maxsize=256)
+def compile_plan(spec: ScheduleSpec) -> Schedule:
+    """Compile ``spec`` into a ``Schedule``. Cached on the spec — the
+    planner's feasibility pass, the simulator, and the executor all share
+    one compilation per variant."""
+    if not spec.bound:
+        raise ValueError(f"cannot compile unbound spec (m=0): {spec}")
+    p = spec.p
+    entry = spec.entry
+    streams = {
+        i: _plan_stream(spec, i, entry.stream(p, spec.m, i, spec.v, spec.cap))
+        for i in range(p)}
+    partner = partner_map(p) if spec.balanced else {}
+    traces, counts = stash_accounting(streams, p, partner)
+    peaks = {i: (max(t) if t else 0) for i, t in traces.items()}
+    evictions = {i: sum(1 for x in streams[i] if x.op == EVICT)
+                 for i in range(p)}
+    loads = {i: sum(1 for x in streams[i] if x.op == LOAD)
+             for i in range(p)}
+    cap = spec.resolved_cap
+    if cap is None:
+        bounds: Dict[int, Optional[int]] = {i: None for i in range(p)}
+    elif spec.cap is not None:
+        bounds = dict(peaks)
+    else:
+        bounds = {i: cap for i in range(p)}
+    return Schedule(spec=spec, streams=streams, partner=partner, cap=cap,
+                    bounds=bounds, peak_stash=peaks,
+                    num_evictions=evictions, num_loads=loads)
+
+
+def num_moves(spec: ScheduleSpec) -> int:
+    """Total EVICT + LOAD instructions one step of ``spec`` performs —
+    the traffic count the planner charges eviction bandwidth with.
+    Covers every balanced kind and cap override (the counts come from the
+    stream actually built, not a closed form); 0 for unbalanced kinds."""
+    if not spec.balanced:
+        return 0
+    return compile_plan(spec).moves
+
+
+# ---------------------------------------------------------------------------
+# The dispatch engine
+# ---------------------------------------------------------------------------
+class ScheduleDeadlock(RuntimeError):
+    """No stage can make progress: a dependency cycle or a handler that
+    blocks forever. Carries the per-stage program counters for debugging."""
+
+    def __init__(self, idx: Mapping[int, int],
+                 streams: Mapping[int, Sequence[Any]]):
+        self.idx = dict(idx)
+        stuck = {i: repr(streams[i][j]) for i, j in idx.items()
+                 if j < len(streams[i])}
+        super().__init__(f"schedule deadlock; next instruction per stage: "
+                         f"{stuck}")
+
+
+#: Sentinel a handler returns when its instruction's inputs are not ready
+#: yet; the engine moves on to the next stage and retries later.
+BLOCKED = object()
+
+Handler = Callable[[int, Any], Any]
+
+
+def run(streams: Mapping[int, Sequence[Any]],
+        handlers: Mapping[str, Handler], *, greedy: bool = True) -> int:
+    """The ready-instruction dispatch loop — the ONLY scheduling loop in
+    the codebase. Simulator, executor, and stash accounting are handler
+    sets over it.
+
+    Each stage's stream is consumed in order; ``handlers[op](stage, ins)``
+    executes one instruction or returns ``BLOCKED`` to signal that an
+    upstream input has not been produced yet. ``greedy=True`` drains each
+    stage as far as it can go per round (dataflow consumers: simulator,
+    executor); ``greedy=False`` takes at most one instruction per stage
+    per round — the deterministic round-robin merge the stash accounting
+    counts over. A full round with no progress raises
+    ``ScheduleDeadlock``. Returns the number of instructions dispatched.
+    """
+    stages = sorted(streams)
+    idx = {i: 0 for i in stages}
+    remaining = sum(len(streams[i]) for i in stages)
+    done = 0
+    while remaining:
+        progressed = False
+        for i in stages:
+            stream = streams[i]
+            while idx[i] < len(stream):
+                ins = stream[idx[i]]
+                if handlers[ins.op](i, ins) is BLOCKED:
+                    break
+                idx[i] += 1
+                remaining -= 1
+                done += 1
+                progressed = True
+                if not greedy:
+                    break
+        if not progressed:
+            raise ScheduleDeadlock(idx, streams)
+    return done
+
+
+def stash_accounting(streams: Mapping[int, Sequence[Any]], p: int,
+                     partner: Optional[Mapping[int, int]] = None,
+                     ) -> Tuple[Dict[int, List[int]], Dict[int, int]]:
+    """Replay ``streams`` through the engine with counting handlers.
+
+    Returns ``(traces, counts)``: per-stage traces of LOCAL stashed-unit
+    counts after each event (including foreign stashes accepted from the
+    paired evictor) and the final counts (all zero for a well-formed
+    schedule). Works on raw ``Instr`` and compiled ``PlannedInstr``
+    streams alike — the handlers only read ``op``.
+    """
+    partner = partner_map(p) if partner is None else partner
+    counts = {i: 0 for i in range(p)}
+    traces: Dict[int, List[int]] = {i: [] for i in range(p)}
+
+    def bump(i: int, delta: int) -> None:
+        counts[i] += delta
+        traces[i].append(counts[i])
+
+    def on_f(i, ins):
+        bump(i, +1)
+
+    def on_b(i, ins):
+        bump(i, -1)
+
+    def on_evict(i, ins):
+        counts[i] -= 1
+        counts[partner[i]] += 1
+        traces[partner[i]].append(counts[partner[i]])
+        traces[i].append(counts[i])
+
+    def on_load(i, ins):
+        counts[i] += 1
+        counts[partner[i]] -= 1
+        traces[partner[i]].append(counts[partner[i]])
+        traces[i].append(counts[i])
+
+    run(streams, {F: on_f, B: on_b, EVICT: on_evict, LOAD: on_load},
+        greedy=False)
+    return traces, counts

@@ -6,14 +6,18 @@ Ops:
   EVICT(mb)  (BPipe, evictor only) ship mb's stashed activation to partner
   LOAD(mb)   (BPipe, evictor only) fetch it back ahead of B(mb)
 
-The streams are *data*: both the discrete-event simulator (core/simulator)
-and the executable runtime (pipeline/executor) interpret them, which keeps
-"what BPipe does" in exactly one place.
+The streams are *data*. This module holds the stream builders and the
+declarative kind registry (``SCHEDULES`` / ``register``); compiling a
+stream set into a dispatchable artifact — dependency edges, partner map,
+stash bounds, peak accounting — is ``core.plan``'s job, and every
+consumer (simulator, executor, memory model, planner) runs off that
+compiled ``plan.Schedule``. Registering a kind here is the ONE step that
+makes it plannable, simulable, and executable (docs/api.md).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 F, B, EVICT, LOAD = "F", "B", "EVICT", "LOAD"
 
@@ -182,22 +186,109 @@ def bpipe_interleaved(p: int, m: int, stage: int, v: int = 2,
     return _balance(one_f_one_b_interleaved(p, m, stage, v), cap)
 
 
-def num_evictions(p: int, m: int, stage: int) -> int:
-    """How many EVICTs stage performs over a step (continuous balancing)."""
-    return sum(1 for ins in bpipe(p, m, stage) if ins.op == EVICT)
+# ---------------------------------------------------------------------------
+# The kind registry — one declarative entry per schedule kind
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ScheduleKind:
+    """Everything the rest of the system needs to know about a schedule
+    kind. Registering one of these (``register``) makes the kind
+    compilable (``plan.compile_plan``), plannable (``planner.space``),
+    simulable, and executable — no interpreter edits.
+
+    Fields:
+      name:        registry key (``ScheduleSpec.kind``).
+      builder:     per-stage stream builder. Signature by flags:
+                   ``(p, m, stage)`` plain, ``+ v`` if interleaved,
+                   ``+ cap=None`` keyword if balanced.
+      interleaved: streams carry virtual-chunk instructions (v >= 2,
+                   m % p == 0, p*v <= num_layers).
+      balanced:    BPipe family — emits EVICT/LOAD under a stash cap and
+                   accepts a ``cap`` override.
+      default_cap: ``(p, v) -> int`` — the kind's default stash bound
+                   (balanced kinds only).
+      cap_roof:    ``(p, m, v) -> int`` — the cap above which balancing
+                   degenerates to the unbalanced twin; bounds the
+                   planner's cap search (balanced kinds only).
+    """
+    name: str
+    builder: Callable[..., Stream]
+    interleaved: bool = False
+    balanced: bool = False
+    default_cap: Optional[Callable[[int, int], int]] = None
+    cap_roof: Optional[Callable[[int, int, int], int]] = None
+
+    def __post_init__(self):
+        if self.balanced and (self.default_cap is None
+                              or self.cap_roof is None):
+            raise ValueError(
+                f"{self.name}: balanced kinds need default_cap and "
+                f"cap_roof — the planner's cap search depends on both")
+
+    def stream(self, p: int, m: int, stage: int, v: int = 1,
+               cap: Optional[int] = None) -> Stream:
+        """Build stage ``stage``'s raw instruction stream (the normalized
+        entry point ``plan.compile_plan`` calls)."""
+        kw = {}
+        if self.balanced and cap is not None:
+            kw["cap"] = cap
+        if self.interleaved:
+            return self.builder(p, m, stage, v, **kw)
+        return self.builder(p, m, stage, **kw)
 
 
-SCHEDULES = {
-    "gpipe": gpipe,
-    "1f1b": one_f_one_b,
-    "bpipe": bpipe,
-    "1f1b_interleaved": one_f_one_b_interleaved,
-    "bpipe_interleaved": bpipe_interleaved,
-}
+SCHEDULES: Dict[str, ScheduleKind] = {}
 
-# Kinds whose streams carry virtual-chunk instructions; ``build`` threads
-# the chunks-per-device count v to these (others ignore it).
-INTERLEAVED = frozenset({"1f1b_interleaved", "bpipe_interleaved"})
+# Kinds whose streams carry virtual-chunk instructions / balance a stash
+# cap — derived from the registry, rebuilt on every ``register`` call.
+INTERLEAVED: frozenset = frozenset()
+BPIPE_FAMILY: frozenset = frozenset()
+
+
+def _rebuild_derived() -> None:
+    global INTERLEAVED, BPIPE_FAMILY
+    INTERLEAVED = frozenset(k for k, e in SCHEDULES.items() if e.interleaved)
+    BPIPE_FAMILY = frozenset(k for k, e in SCHEDULES.items() if e.balanced)
+
+
+def register(entry: ScheduleKind, replace: bool = False) -> ScheduleKind:
+    """Register a schedule kind. ``replace=False`` guards against
+    accidental shadowing. Clears the plan-compile cache so a replaced
+    kind cannot serve stale artifacts."""
+    if entry.name in SCHEDULES and not replace:
+        raise ValueError(f"schedule kind {entry.name!r} already registered")
+    SCHEDULES[entry.name] = entry
+    _rebuild_derived()
+    from repro.core import plan as _plan   # deferred: plan imports us
+    _plan.compile_plan.cache_clear()
+    return entry
+
+
+def unregister(name: str) -> None:
+    """Remove a registered kind (tests / plugin teardown)."""
+    SCHEDULES.pop(name, None)
+    _rebuild_derived()
+    from repro.core import plan as _plan
+    _plan.compile_plan.cache_clear()
+
+
+for _entry in (
+    ScheduleKind("gpipe", gpipe),
+    ScheduleKind("1f1b", one_f_one_b),
+    ScheduleKind("bpipe", bpipe, balanced=True,
+                 default_cap=lambda p, v: bpipe_cap(p),
+                 cap_roof=lambda p, m, v: max(min(p, m), 2)),
+    ScheduleKind("1f1b_interleaved", one_f_one_b_interleaved,
+                 interleaved=True),
+    ScheduleKind("bpipe_interleaved", bpipe_interleaved, interleaved=True,
+                 balanced=True,
+                 default_cap=bpipe_interleaved_cap,
+                 cap_roof=lambda p, m, v: max(interleaved_peak(p, m, 0, v),
+                                              2)),
+):
+    SCHEDULES[_entry.name] = _entry
+_rebuild_derived()
+del _entry
 
 
 def virtual_stage(stage: int, chunk: int, p: int) -> int:
@@ -206,72 +297,45 @@ def virtual_stage(stage: int, chunk: int, p: int) -> int:
     return chunk * p + stage
 
 
-# Kinds that balance stash under a cap (and accept a ``cap`` override).
-BPIPE_FAMILY = frozenset({"bpipe", "bpipe_interleaved"})
-
-
 def schedule_cap(kind: str, p: int, v: int = 2,
                  cap: int | None = None) -> int | None:
     """The schedule's per-device stash bound (or the ``cap`` override for
-    BPipe-family kinds), or None if unbounded."""
-    if kind == "bpipe":
-        return cap if cap is not None else bpipe_cap(p)
-    if kind == "bpipe_interleaved":
-        return cap if cap is not None else bpipe_interleaved_cap(p, v)
-    return None
+    balanced kinds), or None if unbounded."""
+    entry = SCHEDULES[kind]
+    if not entry.balanced:
+        return None
+    return cap if cap is not None \
+        else entry.default_cap(p, v if entry.interleaved else 1)
+
+
+# ---------------------------------------------------------------------------
+# Legacy knob-tuple entry points — thin shims over ``core.plan``.
+# New code should construct a ``plan.ScheduleSpec`` and compile it.
+# ---------------------------------------------------------------------------
+def _spec(kind: str, p: int, m: int, v: int = 2, cap: int | None = None):
+    from repro.core import plan as _plan
+    entry = SCHEDULES[kind]
+    return _plan.ScheduleSpec(kind, p, m,
+                              v=v if entry.interleaved else 1,
+                              cap=cap if entry.balanced else None)
 
 
 def build(kind: str, p: int, m: int, v: int = 2,
           cap: int | None = None) -> Dict[int, Stream]:
-    fn = SCHEDULES[kind]
-    kw = {}
-    if kind in BPIPE_FAMILY and cap is not None:
-        kw["cap"] = cap
-    if kind in INTERLEAVED:
-        return {i: fn(p, m, i, v, **kw) for i in range(p)}
-    return {i: fn(p, m, i, **kw) for i in range(p)}
+    """Per-stage raw instruction streams (legacy view of the compiled
+    plan; ``plan.compile_plan(spec).streams`` carries the dep-resolved
+    version)."""
+    from repro.core import plan as _plan
+    return _plan.compile_plan(_spec(kind, p, m, v, cap)).instr_streams()
 
 
-# ---------------------------------------------------------------------------
-# Stash accounting (drives the memory model + executor assertions)
-# ---------------------------------------------------------------------------
 def stash_trace(streams: Dict[int, Stream], p: int) -> Dict[int, List[int]]:
     """Per-stage trace of LOCAL stashed-activation counts after each event,
-    including foreign stashes accepted from the paired evictor."""
-    partner = {}
-    for a, b in bpipe_pairs(p):
-        partner[a] = b
-        partner[b] = a
-    # Build a global event order: round-robin merge is enough for counting
-    # because EVICT/LOAD only move stash between fixed pairs.
-    counts = {i: 0 for i in range(p)}
-    traces = {i: [] for i in range(p)}
-    idx = {i: 0 for i in range(p)}
-    remaining = sum(len(s) for s in streams.values())
-    while remaining:
-        progressed = False
-        for i in range(p):
-            if idx[i] >= len(streams[i]):
-                continue
-            ins = streams[i][idx[i]]
-            idx[i] += 1
-            remaining -= 1
-            progressed = True
-            if ins.op == F:
-                counts[i] += 1
-            elif ins.op == B:
-                counts[i] -= 1
-            elif ins.op == EVICT:
-                counts[i] -= 1
-                counts[partner[i]] += 1
-                traces[partner[i]].append(counts[partner[i]])
-            elif ins.op == LOAD:
-                counts[i] += 1
-                counts[partner[i]] -= 1
-                traces[partner[i]].append(counts[partner[i]])
-            traces[i].append(counts[i])
-        assert progressed
-    return traces
+    including foreign stashes accepted from the paired evictor (a
+    round-robin merge is enough for counting because EVICT/LOAD only move
+    stash between fixed pairs)."""
+    from repro.core import plan as _plan
+    return _plan.stash_accounting(streams, p)[0]
 
 
 def peak_stash(kind: str, p: int, m: int, v: int = 2,
@@ -282,6 +346,14 @@ def peak_stash(kind: str, p: int, m: int, v: int = 2,
     ``memory_model.act_bytes_per_stage``). A non-default BPipe ``cap``
     shifts stash between evictors and acceptors; this accounting is what
     the planner's feasibility check consumes."""
-    streams = build(kind, p, m, v, cap)
-    traces = stash_trace(streams, p)
-    return {i: (max(t) if t else 0) for i, t in traces.items()}
+    from repro.core import plan as _plan
+    return dict(_plan.compile_plan(_spec(kind, p, m, v, cap)).peak_stash)
+
+
+def num_evictions(p: int, m: int, stage: int, kind: str = "bpipe",
+                  v: int = 2, cap: int | None = None) -> int:
+    """How many EVICTs ``stage`` performs over a step. Generalized to any
+    balanced kind and cap override (``plan.num_moves`` gives the total
+    EVICT+LOAD traffic count for a spec)."""
+    from repro.core import plan as _plan
+    return _plan.compile_plan(_spec(kind, p, m, v, cap)).num_evictions[stage]

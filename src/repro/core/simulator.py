@@ -1,5 +1,5 @@
 """Discrete-event simulator of pipeline schedules (GPipe / 1F1B / BPipe,
-plain and interleaved).
+plain and interleaved) — a handler set over ``plan.run``.
 
 Validates the paper's closed-form estimates against explicit timelines and
 quantifies what the paper *ignores* (its §4: "We also temporarily ignore
@@ -11,33 +11,42 @@ Model:
     interleaved kinds each of the v chunks does 1/v of the work, so a
     chunk's F costs Tf/v and its B costs Tb/v,
   * p2p boundary transfer between adjacent *virtual* stages: t_p2p
-    (charged whenever the producing virtual stage lives on a different
-    device, which for p > 1 is every hop — including the device p-1 ->
-    device 0 wraparound between chunks),
+    (charged on every compiled dependency edge whose ``dep_hop`` is set —
+    including the device p-1 -> device 0 wraparound between chunks),
   * EVICT/LOAD: async copies on the evictor<->acceptor link
     (bytes / pair_bw * hops); serialized per link; LOAD(mb, chunk) must
-    finish before B(mb, chunk) starts.
+    finish before B(mb, chunk) starts. LOAD prefetch is issued one
+    *chunk-level* F+B slot ((Tf+Tb)/v) ahead of the backward it feeds,
+    so interleaved BPipe load-stall is charged at chunk granularity, not
+    a whole-device slot (pinned by tests/test_plan.py).
 
-All bookkeeping is keyed (stage, mb, chunk): F of chunk c at virtual
-stage vs = c*p + s depends on virtual stage vs-1 — which may be a chunk
-on the same device — and B of vs depends on vs+1, so interleaved and
-BPipe makespans are directly comparable.
+The schedule itself — streams, dependency edges, device hops, partner
+map — comes precompiled from ``plan.compile_plan``; this module only
+prices instructions. Makespans across plain/interleaved/BPipe variants
+are directly comparable.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional
 
-from repro.core import schedule as sched
+from repro.core import plan as P
 from repro.core.schedule import B, EVICT, F, LOAD
 
 
 @dataclasses.dataclass
 class SimConfig:
-    p: int
-    m: int                      # microbatches
-    Tf: float                   # forward time per microbatch per device
-    Tb: float                   # backward time (typically 2*Tf)
+    """Cost knobs plus the schedule variant to price.
+
+    Preferred: ``SimConfig(spec=ScheduleSpec(...), Tf=..., Tb=...)``.
+    Legacy: the (p, m, kind, v, cap) knobs construct the spec — kept as a
+    deprecation shim; ``spec`` wins when both are given (it re-syncs the
+    legacy fields so old readers of ``cfg.p``/``cfg.kind`` stay correct).
+    """
+    p: int = 0
+    m: int = 0                  # microbatches
+    Tf: float = 0.0             # forward time per microbatch per device
+    Tb: float = 0.0             # backward time (typically 2*Tf)
     t_p2p: float = 0.0          # stage-boundary activation transfer
     evict_bytes: float = 0.0    # bytes per EVICT/LOAD
     pair_bw: float = float("inf")
@@ -45,6 +54,21 @@ class SimConfig:
     kind: str = "1f1b"
     v: int = 2                  # chunks per device (interleaved kinds only)
     cap: Optional[int] = None   # BPipe-family stash-cap override
+    spec: Optional[P.ScheduleSpec] = None
+
+    def __post_init__(self):
+        if self.spec is not None:
+            self.p, self.m = self.spec.p, self.spec.m
+            self.kind, self.cap = self.spec.kind, self.spec.cap
+            if self.spec.interleaved:
+                self.v = self.spec.v
+
+    def to_spec(self) -> P.ScheduleSpec:
+        """The schedule variant this config prices."""
+        if self.spec is not None:
+            return self.spec
+        return P.ScheduleSpec(self.kind, self.p, self.m, v=self.v,
+                              cap=self.cap)
 
 
 @dataclasses.dataclass
@@ -60,102 +84,90 @@ class SimResult:
         return 1.0 - sum(self.busy) / total
 
 
-def simulate(cfg: SimConfig) -> SimResult:
-    p = cfg.p
-    v = cfg.v if cfg.kind in sched.INTERLEAVED else 1
-    nv = p * v
+def _simulate(cfg: SimConfig) -> SimResult:
+    spec = cfg.to_spec()
+    schedule = P.compile_plan(spec)
+    p, v = spec.p, spec.v
     # One full microbatch of F work per device is Tf regardless of v:
     # each chunk holds 1/v of the device's layers.
     tf, tb = cfg.Tf / v, cfg.Tb / v
-    streams = sched.build(cfg.kind, p, cfg.m, v, cfg.cap)
-    partner = {}
-    for a, b_ in sched.bpipe_pairs(p):
-        partner[a] = b_
-        partner[b_] = a
     t_move = (cfg.evict_bytes / cfg.pair_bw) * cfg.pair_hops \
         if cfg.evict_bytes else 0.0
+    partner = schedule.partner
 
-    idx = {i: 0 for i in range(p)}          # next instruction pointer
     t_stage = {i: 0.0 for i in range(p)}    # stage compute frontier
-    f_done: Dict[tuple, float] = {}         # (stage, mb, chunk) -> fwd end
-    b_done: Dict[tuple, float] = {}
-    evict_end: Dict[tuple, float] = {}      # (stage, mb, chunk) -> EVICT end
-    load_end: Dict[tuple, float] = {}
+    done: Dict[P.DepKey, float] = {}        # (op, stage, mb, chunk) -> end
     link_free: Dict[tuple, float] = {}      # pair link serialization
     busy = {i: 0.0 for i in range(p)}
-    stall = 0.0
+    state = {"stall": 0.0, "last_b": 0.0}
     timeline: Dict[int, List] = {i: [] for i in range(p)}
 
-    remaining = sum(len(s) for s in streams.values())
-    while remaining:
-        progressed = False
-        for i in range(p):
-            while idx[i] < len(streams[i]):
-                ins = streams[i][idx[i]]
-                key = (i, ins.mb, ins.chunk)
-                vs = sched.virtual_stage(i, ins.chunk, p)
-                if ins.op == F:
-                    if vs == 0:
-                        dep = 0.0
-                    else:
-                        pi, pc = (vs - 1) % p, (vs - 1) // p
-                        dep = f_done.get((pi, ins.mb, pc))
-                        if dep is None:
-                            break
-                    hop = cfg.t_p2p if (vs > 0 and (vs - 1) % p != i) else 0.0
-                    start_t = max(t_stage[i], dep + hop)
-                    end_t = start_t + tf
-                    f_done[key] = end_t
-                    busy[i] += tf
-                    t_stage[i] = end_t
-                elif ins.op == B:
-                    if vs == nv - 1:
-                        dep = f_done.get(key)
-                        hop = 0.0
-                    else:
-                        ni, nc = (vs + 1) % p, (vs + 1) // p
-                        dep = b_done.get((ni, ins.mb, nc))
-                        hop = cfg.t_p2p if ni != i else 0.0
-                    if dep is None:
-                        break
-                    start_t = max(t_stage[i], dep + hop)
-                    le = load_end.get(key)
-                    if le is not None and le > start_t:
-                        stall += le - start_t
-                        start_t = le
-                    end_t = start_t + tb
-                    b_done[key] = end_t
-                    busy[i] += tb
-                    t_stage[i] = end_t
-                elif ins.op == EVICT:
-                    # async: starts when F(mb, chunk) finished and the link
-                    # frees
-                    pair = (min(i, partner[i]), max(i, partner[i]))
-                    start_t = max(f_done[key], link_free.get(pair, 0.0))
-                    end_t = start_t + t_move
-                    evict_end[key] = end_t
-                    link_free[pair] = end_t
-                else:  # LOAD
-                    # async prefetch, issued one F+B slot ahead of the
-                    # backward it feeds (overlaps that compute window)
-                    pair = (min(i, partner[i]), max(i, partner[i]))
-                    issue = max(0.0, t_stage[i] - tf - tb)
-                    start_t = max(issue, evict_end[key],
-                                  link_free.get(pair, 0.0))
-                    end_t = start_t + t_move
-                    load_end[key] = end_t
-                    link_free[pair] = end_t
-                timeline[i].append((ins.op, ins.mb, ins.chunk, start_t, end_t))
-                idx[i] += 1
-                remaining -= 1
-                progressed = True
-        if not progressed:
-            raise RuntimeError("schedule deadlock")
-    makespan = max(max(t_stage.values()),
-                   max(b_done.values(), default=0.0))
+    def finish(i, ins, start_t, end_t):
+        timeline[i].append((ins.op, ins.mb, ins.chunk, start_t, end_t))
+
+    def on_f(i, ins):
+        if ins.dep is None:
+            dep = 0.0
+        else:
+            dep = done.get(ins.dep)
+            if dep is None:
+                return P.BLOCKED
+        hop = cfg.t_p2p if ins.dep_hop else 0.0
+        start_t = max(t_stage[i], dep + hop)
+        end_t = start_t + tf
+        done[ins.done_key] = end_t
+        busy[i] += tf
+        t_stage[i] = end_t
+        finish(i, ins, start_t, end_t)
+
+    def on_b(i, ins):
+        dep = done.get(ins.dep)
+        if dep is None:
+            return P.BLOCKED
+        hop = cfg.t_p2p if ins.dep_hop else 0.0
+        start_t = max(t_stage[i], dep + hop)
+        le = done.get((LOAD, i, ins.mb, ins.chunk))
+        if le is not None and le > start_t:
+            state["stall"] += le - start_t
+            start_t = le
+        end_t = start_t + tb
+        done[ins.done_key] = end_t
+        state["last_b"] = max(state["last_b"], end_t)
+        busy[i] += tb
+        t_stage[i] = end_t
+        finish(i, ins, start_t, end_t)
+
+    def on_evict(i, ins):
+        # async: starts when F(mb, chunk) finished and the link frees
+        pair = (min(i, partner[i]), max(i, partner[i]))
+        start_t = max(done[ins.dep], link_free.get(pair, 0.0))
+        end_t = start_t + t_move
+        done[ins.done_key] = end_t
+        link_free[pair] = end_t
+        finish(i, ins, start_t, end_t)
+
+    def on_load(i, ins):
+        # async prefetch, issued one chunk-level F+B slot ahead of the
+        # backward it feeds (overlaps that compute window)
+        pair = (min(i, partner[i]), max(i, partner[i]))
+        issue = max(0.0, t_stage[i] - tf - tb)
+        start_t = max(issue, done[ins.dep], link_free.get(pair, 0.0))
+        end_t = start_t + t_move
+        done[ins.done_key] = end_t
+        link_free[pair] = end_t
+        finish(i, ins, start_t, end_t)
+
+    P.run(schedule.streams, {F: on_f, B: on_b, EVICT: on_evict,
+                             LOAD: on_load})
+    makespan = max(max(t_stage.values()), state["last_b"])
     return SimResult(makespan=makespan,
                      busy=[busy[i] for i in range(p)],
-                     load_stall=stall, timeline=timeline)
+                     load_stall=state["stall"], timeline=timeline)
+
+
+# Public entry point. The dispatch loop itself lives in ``plan.run`` —
+# this module contributes only the pricing handlers above.
+simulate = _simulate
 
 
 def mfu_from_sim(res: SimResult, model_flops: float, p: int, t: int,

@@ -64,6 +64,10 @@ def main(argv=None):
                     help="table rows to print (0 = all)")
     ap.add_argument("--csv", action="store_true",
                     help="machine-readable rows instead of the table")
+    ap.add_argument("--spec-json", action="store_true",
+                    help="also print each arm's recommended plan as a "
+                         "ScheduleSpec JSON line (hand it to the "
+                         "executor/simulator via ScheduleSpec.from_dict)")
     ap.add_argument("--trace", default="",
                     help="Chrome-trace JSON from executor step(trace=True); "
                          "calibrates Tf/Tb instead of Table5/analytic costs")
@@ -106,6 +110,17 @@ def main(argv=None):
         print(report.format_table(ranked, top=args.top))
     for line in report.summarize(cfg.name, n, ranked):
         print(line)
+    if args.spec_json:
+        import json
+        from repro.planner.rank import arms_of, recommend
+        for arm in arms_of(ranked) + [None]:
+            best = recommend(ranked, arm)
+            if best is None:
+                continue
+            print(json.dumps({
+                "arm": arm or "overall", "b": best.cand.b,
+                "attention": best.cand.attention,
+                "spec": best.cand.spec(n.p).to_dict()}))
     return 0
 
 

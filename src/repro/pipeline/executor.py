@@ -1,8 +1,9 @@
 """Executable pipeline runtime: a schedule interpreter with true 1F1B /
 BPipe activation-stash semantics, chunk-aware for interleaved schedules.
 
-This is the Megatron-equivalent layer of the reproduction: schedules from
-``core.schedule`` are interpreted instruction-by-instruction; each F runs
+This is the Megatron-equivalent layer of the reproduction: a compiled
+``plan.Schedule`` is interpreted instruction-by-instruction as a handler
+set over the shared dispatch engine (``plan.run``); each F runs
 ``jax.vjp`` on its (virtual) stage (so the stash — the vjp residuals — is
 *really* held until the matching B), EVICT/LOAD move stash entries between
 the evictor's and acceptor's stores (on one host this is bookkeeping plus
@@ -13,8 +14,9 @@ cotangent upstream.
 Interleaved kinds give each device v model chunks: chunk c on device s is
 virtual stage ``c*p + s``; activations flow virtual stage vs -> vs+1 (the
 hop from device p-1 back to device 0 crosses chunks), and every stash /
-routing key is (stage, mb, chunk), so the same interpreter executes plain
-and interleaved streams.
+routing key is (stage, mb, chunk), so the same handler set executes plain
+and interleaved streams. The dependency edges and partner map come
+precompiled on the Schedule — the executor re-derives nothing.
 
 Compilation contract (tested): stage fns are built and jitted once in
 ``__init__`` and the microbatch is a ``jax.vjp`` *argument* — not a value
@@ -37,6 +39,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import memory_model as mm
+from repro.core import plan as P
 from repro.core import schedule as sched
 from repro.core.notation import Notation
 from repro.core.schedule import B, EVICT, F, LOAD
@@ -139,35 +142,52 @@ class StepResult:
 class PipelineExecutor:
     """Interprets a pipeline schedule over a real model.
 
-    Args:
-      cfg: model config (any assigned architecture).
+    Preferred construction passes the schedule variant as a value:
+
+        PipelineExecutor(cfg, spec=ScheduleSpec("bpipe", p=4), micro_batch=2)
+
+    A spec with ``m=0`` is a template the executor binds to the real
+    batch at ``step()`` (m = batch_rows / micro_batch); a bound spec
+    additionally pins the expected microbatch count.
+
+    Legacy args (deprecation shims — they construct the spec):
       p: number of pipeline stages (p * v must be <= num_layers).
-      kind: 'gpipe' | '1f1b' | 'bpipe' | '1f1b_interleaved' |
-        'bpipe_interleaved'.
-      micro_batch: rows per microbatch (global batch must divide evenly).
+      kind: any registered schedule kind (``schedule.SCHEDULES``).
       v: virtual chunks per device (interleaved kinds only; ignored
         otherwise). Interleaved streams additionally require m % p == 0.
       cap: BPipe-family stash-cap override (planner-chosen). With a
         non-default cap the live assertion bounds each stage by the
         schedule's own per-stage peak accounting (a tighter evictor cap
         legitimately raises the acceptor's peak above it).
+
+    Other args:
+      cfg: model config (any assigned architecture).
+      micro_batch: rows per microbatch (global batch must divide evenly).
       notation: optional paper-notation override for byte accounting.
     """
 
-    def __init__(self, cfg: ModelConfig, p: int, kind: str = "1f1b",
-                 micro_batch: int = 1, remat: str = "none",
-                 notation: Optional[Notation] = None, enforce_cap: bool = True,
-                 v: int = 2, cap: Optional[int] = None):
-        assert kind in sched.SCHEDULES, kind
-        self.cfg, self.p, self.kind = cfg, p, kind
-        self.v = v if kind in sched.INTERLEAVED else 1
-        self.n_virtual = p * self.v
-        assert self.n_virtual <= cfg.num_layers, (p, self.v, cfg.num_layers)
+    def __init__(self, cfg: ModelConfig, p: Optional[int] = None,
+                 kind: str = "1f1b", micro_batch: int = 1,
+                 remat: str = "none", notation: Optional[Notation] = None,
+                 enforce_cap: bool = True, v: int = 2,
+                 cap: Optional[int] = None,
+                 spec: Optional[P.ScheduleSpec] = None):
+        if spec is None:
+            assert p is not None, "need p (or pass spec=ScheduleSpec(...))"
+            assert kind in sched.SCHEDULES, kind
+            spec = P.ScheduleSpec(kind, p, 0, v=v, cap=cap)
+        else:
+            assert p is None or p == spec.p, (p, spec)
+        self.spec = spec
+        self.cfg, self.p, self.kind = cfg, spec.p, spec.kind
+        self.v = spec.v
+        self.n_virtual = spec.n_virtual
+        assert self.n_virtual <= cfg.num_layers, \
+            (spec.p, self.v, cfg.num_layers)
         self.b = micro_batch
         self.remat = remat
         self.enforce_cap = enforce_cap
-        self._custom_cap = cap is not None and kind in sched.BPIPE_FAMILY
-        self.cap = sched.schedule_cap(kind, p, self.v, cap)
+        self.cap = spec.resolved_cap
         # One jitted fn per *virtual* stage, built once: jax.vjp over a
         # stable jitted callable reuses its trace, so repeated step()
         # calls (and every microbatch within a step) compile nothing new.
@@ -175,37 +195,17 @@ class PipelineExecutor:
             jax.jit(stage_mod.make_stage_fn(cfg, self.n_virtual, vs, remat))
             for vs in range(self.n_virtual)]
         self.splitter = stage_mod.StageSplitter(cfg, self.n_virtual)
-        self.partner = {}
-        for a, c in sched.bpipe_pairs(p):
-            self.partner[a] = c
-            self.partner[c] = a
         self.notation = notation
-        self._streams: Dict[int, Dict[int, sched.Stream]] = {}  # m -> streams
-        self._bounds: Dict[int, Dict[int, int]] = {}  # m -> per-stage bound
 
     # ------------------------------------------------------------------
-    def _streams_for(self, m: int) -> Dict[int, sched.Stream]:
-        if m not in self._streams:
-            if self.kind in sched.INTERLEAVED:
-                assert m % self.p == 0, (m, self.p)
-            self._streams[m] = sched.build(self.kind, self.p, m, self.v,
-                                           self.cap if self._custom_cap
-                                           else None)
-            if self.cap is None:
-                bound = {i: None for i in range(self.p)}
-            elif self._custom_cap:
-                # The paper-default caps bound every stage uniformly; a
-                # planner cap only bounds the evictors, so assert against
-                # the schedule's own per-stage accounting instead.
-                bound = sched.peak_stash(self.kind, self.p, m, self.v,
-                                         self.cap)
-            else:
-                bound = {i: self.cap for i in range(self.p)}
-            self._bounds[m] = bound
-        return self._streams[m]
+    def _schedule_for(self, m: int) -> P.Schedule:
+        if self.spec.bound:
+            assert m == self.spec.m, \
+                f"batch implies m={m} but spec binds m={self.spec.m}"
+        return P.compile_plan(self.spec.with_m(m))
 
     def step(self, params, batch, trace: bool = False) -> StepResult:
-        cfg, p, v = self.cfg, self.p, self.v
+        cfg, p = self.cfg, self.p
         nv = self.n_virtual
         bsz = batch["tokens"].shape[0]
         assert bsz % self.b == 0
@@ -216,11 +216,13 @@ class PipelineExecutor:
             s=seq, v=cfg.vocab_size, B=bsz, p=p, t=1)
         attention = {"none": "none", "attn": "recompute", "full": "recompute",
                      "flash": "flash"}.get(self.remat, "none")
-        store = ActivationStore(p, mm.act_bytes_per_stage(n, attention, v))
+        store = ActivationStore(
+            p, mm.act_bytes_per_stage(n, attention, self.v))
 
         stage_params = self.splitter.split(params)
-        streams = self._streams_for(m)
-        bounds = self._bounds[m]
+        schedule = self._schedule_for(m)
+        bounds = schedule.bounds
+        partner = schedule.partner
         events: Optional[List[TraceEvent]] = [] if trace else None
         t_step0 = time.perf_counter()
 
@@ -239,80 +241,75 @@ class PipelineExecutor:
         grads: List[Any] = [None] * nv
         dummy = (jnp.zeros((self.b, seq, cfg.d_model), jnp.dtype(cfg.dtype)),
                  jnp.zeros((), jnp.float32))
-
-        idx = {i: 0 for i in range(p)}
-        remaining = sum(len(s) for s in streams.values())
         scale = jnp.float32(1.0 / m)
-        while remaining:
-            progressed = False
-            for i in range(p):
-                while idx[i] < len(streams[i]):
-                    ins = streams[i][idx[i]]
-                    vs = sched.virtual_stage(i, ins.chunk, p)
-                    sync = None
-                    t0 = 0.0
-                    if ins.op == F:
-                        # pop: the boundary activation has exactly one
-                        # consumer; holding it past this F would overhang
-                        # the stash accounting the cap is asserted on.
-                        carry = dummy if vs == 0 else act_in.pop((vs, ins.mb), None)
-                        if carry is None:
-                            break
-                        if trace:
-                            t0 = time.perf_counter()
-                        out, vjp_fn = jax.vjp(
-                            self.stage_fns[vs], stage_params[vs], carry,
-                            micros[ins.mb])
-                        store.put(i, ins.mb, vjp_fn, ins.chunk)
-                        if vs == nv - 1:
-                            losses[ins.mb] = out
-                        else:
-                            act_in[(vs + 1, ins.mb)] = out
-                        sync = out
-                    elif ins.op == B:
-                        if vs == nv - 1:
-                            cot = scale
-                        else:
-                            cot = grad_in.pop((vs, ins.mb), None)
-                            if cot is None:
-                                break
-                        if trace:
-                            t0 = time.perf_counter()
-                        vjp_fn = store.pop(i, ins.mb, ins.chunk)
-                        d_sp, d_carry, _ = vjp_fn(cot)
-                        grads[vs] = d_sp if grads[vs] is None else jax.tree.map(
-                            jnp.add, grads[vs], d_sp)
-                        if vs > 0:
-                            grad_in[(vs - 1, ins.mb)] = d_carry
-                        sync = (d_sp, d_carry)
-                    elif ins.op == EVICT:
-                        if trace:
-                            t0 = time.perf_counter()
-                        store.evict(i, ins.mb, self.partner[i], ins.chunk)
-                    else:  # LOAD
-                        if trace:
-                            t0 = time.perf_counter()
-                        store.load(i, ins.mb, self.partner[i], ins.chunk)
-                    if trace:
-                        # Block so the event spans the instruction's real
-                        # device time, not just its async dispatch.
-                        if sync is not None:
-                            jax.block_until_ready(sync)
-                        events.append(TraceEvent(
-                            i, ins.op, ins.mb, ins.chunk,
-                            t0 - t_step0, time.perf_counter() - t_step0))
-                    if self.enforce_cap and self.cap is not None:
-                        # EVICT/LOAD also touch the partner's store — check
-                        # both ends so acceptor-side transients can't hide
-                        # behind the acceptor's next pop.
-                        for dev in ((i, self.partner[i])
-                                    if ins.op in (EVICT, LOAD) else (i,)):
-                            assert store.held(dev) <= bounds[dev], \
-                                (dev, ins, store.held(dev), bounds[dev])
-                    idx[i] += 1
-                    remaining -= 1
-                    progressed = True
-            assert progressed, "pipeline deadlock"
+
+        def wrap(body):
+            """Shared post-instruction bookkeeping: trace-event capture
+            (blocking so the event spans real device time, not async
+            dispatch) and the live stash-cap assertion."""
+            def handler(i, ins):
+                t0 = time.perf_counter() if trace else 0.0
+                sync = body(i, ins)
+                if sync is P.BLOCKED:
+                    return P.BLOCKED
+                if trace:
+                    if sync is not None:
+                        jax.block_until_ready(sync)
+                    events.append(TraceEvent(
+                        i, ins.op, ins.mb, ins.chunk,
+                        t0 - t_step0, time.perf_counter() - t_step0))
+                if self.enforce_cap and self.cap is not None:
+                    # EVICT/LOAD also touch the partner's store — check
+                    # both ends so acceptor-side transients can't hide
+                    # behind the acceptor's next pop.
+                    for dev in ((i, partner[i])
+                                if ins.op in (EVICT, LOAD) else (i,)):
+                        assert store.held(dev) <= bounds[dev], \
+                            (dev, ins, store.held(dev), bounds[dev])
+                return None
+            return handler
+
+        def on_f(i, ins):
+            vs = ins.vs
+            # pop: the boundary activation has exactly one consumer;
+            # holding it past this F would overhang the stash accounting
+            # the cap is asserted on.
+            carry = dummy if vs == 0 else act_in.pop((vs, ins.mb), None)
+            if carry is None:
+                return P.BLOCKED
+            out, vjp_fn = jax.vjp(
+                self.stage_fns[vs], stage_params[vs], carry, micros[ins.mb])
+            store.put(i, ins.mb, vjp_fn, ins.chunk)
+            if vs == nv - 1:
+                losses[ins.mb] = out
+            else:
+                act_in[(vs + 1, ins.mb)] = out
+            return out
+
+        def on_b(i, ins):
+            vs = ins.vs
+            if vs == nv - 1:
+                cot = scale
+            else:
+                cot = grad_in.pop((vs, ins.mb), None)
+                if cot is None:
+                    return P.BLOCKED
+            vjp_fn = store.pop(i, ins.mb, ins.chunk)
+            d_sp, d_carry, _ = vjp_fn(cot)
+            grads[vs] = d_sp if grads[vs] is None else jax.tree.map(
+                jnp.add, grads[vs], d_sp)
+            if vs > 0:
+                grad_in[(vs - 1, ins.mb)] = d_carry
+            return (d_sp, d_carry)
+
+        def on_evict(i, ins):
+            store.evict(i, ins.mb, partner[i], ins.chunk)
+
+        def on_load(i, ins):
+            store.load(i, ins.mb, partner[i], ins.chunk)
+
+        P.run(schedule.streams, {F: wrap(on_f), B: wrap(on_b),
+                                 EVICT: wrap(on_evict), LOAD: wrap(on_load)})
 
         loss = sum(losses.values()) * scale
         full_grads = self.splitter.merge(grads)

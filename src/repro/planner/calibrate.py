@@ -21,6 +21,8 @@ import json
 import statistics
 from typing import Dict, List, Optional
 
+from repro.core import plan
+from repro.core import schedule
 from repro.core import simulator as SIM
 from repro.core.notation import Notation
 from repro.core.schedule import B, EVICT, F, LOAD
@@ -74,13 +76,20 @@ def apply(costs: CalibratedCosts, cfg: SIM.SimConfig) -> SIM.SimConfig:
     return dataclasses.replace(cfg, Tf=costs.Tf, Tb=costs.Tb)
 
 
-def replay(costs: CalibratedCosts, kind: str, p: int, m: int, v: int = 2,
+def replay(costs: CalibratedCosts, kind, p: Optional[int] = None,
+           m: Optional[int] = None, v: int = 2,
            cap: Optional[int] = None, evict_bytes: float = 0.0,
            pair_bw: float = float("inf"), pair_hops: int = 1,
            t_p2p: float = 0.0) -> SIM.SimResult:
-    """Simulate schedule ``kind`` under the fitted costs."""
+    """Simulate a schedule variant under the fitted costs. ``kind`` is a
+    ``plan.ScheduleSpec`` (preferred) or a legacy kind name with the
+    (p, m, v, cap) knobs."""
+    if not isinstance(kind, plan.ScheduleSpec):
+        kind = plan.ScheduleSpec(
+            kind, p, m, v=v,
+            cap=cap if kind in schedule.BPIPE_FAMILY else None)
     return SIM.simulate(SIM.SimConfig(
-        p=p, m=m, Tf=costs.Tf, Tb=costs.Tb, kind=kind, v=v, cap=cap,
+        spec=kind, Tf=costs.Tf, Tb=costs.Tb,
         evict_bytes=evict_bytes, pair_bw=pair_bw, pair_hops=pair_hops,
         t_p2p=t_p2p))
 

@@ -55,19 +55,18 @@ def check(n: Notation, cand: Candidate, hbm_bytes: float,
     if cfg is not None and p * cand.v > cfg.num_layers:
         return Feasibility(False, f"p*v={p * cand.v} > {cfg.num_layers} layers")
 
-    hops = 0
-    if cand.kind in sched.BPIPE_FAMILY:
-        plan = BP.plan(p, cand.m, stage_to_device)
-        hops = max(BP.hop_distance(plan).values(), default=0)
-
     try:
-        peak = mm.max_stage_bytes(nb, cand.attention, cand.kind, cfg,
-                                  v=cand.v, cap=cand.cap)
-    except (AssertionError, IndexError):
+        spec = cand.spec(p)
+        peak = mm.max_stage_bytes(nb, cand.attention, spec, cfg)
+    except (AssertionError, IndexError, ValueError):
         # _balance cannot hold the stream under this cap (too tight for
         # the in-flight transients at this (p, m, v)).
-        return Feasibility(False, f"cap={cand.cap} unbalanceable",
-                           pair_hops=hops)
+        return Feasibility(False, f"cap={cand.cap} unbalanceable")
+
+    hops = 0
+    if spec.balanced:
+        plan = BP.plan(p, cand.m, stage_to_device, spec=spec)
+        hops = max(BP.hop_distance(plan).values(), default=0)
     if peak + workspace > hbm_bytes:
         return Feasibility(
             False,

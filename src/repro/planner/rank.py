@@ -28,6 +28,7 @@ from typing import Iterable, List, Optional, Tuple
 from repro.configs.base import ModelConfig
 from repro.core import estimator as E
 from repro.core import memory_model as mm
+from repro.core import plan as plan_mod
 from repro.core import schedule as sched
 from repro.core import simulator as SIM
 from repro.core.flops import model_flops_train, paper_flops
@@ -166,6 +167,8 @@ class RankedPlan:
     required_gain: float = 0.0  # break-even vs the arm's 1F1B baseline
     achieved_gain: float = 0.0
     baseline_b: int = 0
+    moves: int = 0              # EVICT+LOAD count of the stream built
+    traffic_bytes: float = 0.0  # moves x per-unit stash bytes
     verdict: str = ""           # "ok" | "reject" | "infeasible"
     note: str = ""
 
@@ -198,17 +201,20 @@ def rank(n: Notation, cands: Iterable[Candidate], cost: CostModel,
             continue
         nb = n.replace(b=cand.b)
         T = cost.stage_T(nb, cand.attention)
-        is_bpipe = cand.kind in sched.BPIPE_FAMILY
+        spec = cand.spec(n.p)
         res = SIM.simulate(SIM.SimConfig(
-            p=n.p, m=cand.m, Tf=T / 3.0, Tb=2.0 * T / 3.0,
-            kind=cand.kind, v=cand.v, cap=cand.cap,
-            evict_bytes=(mm.eviction_bytes(nb, cand.attention, cand.v)
-                         if is_bpipe else 0.0),
+            spec=spec, Tf=T / 3.0, Tb=2.0 * T / 3.0,
+            evict_bytes=(mm.eviction_bytes(nb, cand.attention, spec.v)
+                         if spec.balanced else 0.0),
             pair_bw=link_bw, pair_hops=max(feas.pair_hops, 1)))
         F = cost.full_flops(n)
         rp.stage_T = T
         rp.makespan = res.makespan
         rp.load_stall = res.load_stall
+        # Traffic accounting from the stream actually built (cap- and
+        # v-aware), not a default-cap closed form.
+        rp.moves = plan_mod.num_moves(spec)
+        rp.traffic_bytes = mm.traffic_bytes(nb, cand.attention, spec)
         rp.mfu = SIM.mfu_from_sim(res, F, n.p, n.t, cost.peak_per_chip)
         rp.mfu_eq3 = E.mfu_model(nb, F, F / n.p,
                                  cost.mfu_stage(nb, cand.attention))

@@ -14,7 +14,8 @@ from repro.core.notation import Notation
 from repro.planner.rank import RankedPlan, arms_of, recommend
 
 _COLS = ("#", "kind", "v", "b", "m", "cap", "attn", "peak_GiB",
-         "makespan_s", "MFU%", "eq3%", "req_gain", "got_gain", "verdict")
+         "makespan_s", "MFU%", "eq3%", "req_gain", "got_gain", "moves",
+         "verdict")
 
 
 def _cell(p: RankedPlan, col: str, idx: int) -> str:
@@ -47,6 +48,9 @@ def _cell(p: RankedPlan, col: str, idx: int) -> str:
         return f"{p.required_gain:.3f}" if p.required_gain else "-"
     if col == "got_gain":
         return f"{p.achieved_gain:.3f}" if p.achieved_gain else "-"
+    if col == "moves":
+        return str(p.moves) if c.kind in sched.BPIPE_FAMILY and p.makespan \
+            else "-"
     if col == "verdict":
         return p.verdict if not p.note else f"{p.verdict}: {p.note}"
     raise KeyError(col)
@@ -75,7 +79,9 @@ def csv_rows(ranked: List[RankedPlan], tag: str, config: str) -> List[str]:
             f"m={c.m},cap={c.cap if c.cap is not None else 'def'},"
             f"attn={c.attention},peak_gib={p.feas.peak_gib:.2f},"
             f"mfu={100 * p.mfu:.2f},req_gain={p.required_gain:.3f},"
-            f"got_gain={p.achieved_gain:.3f},verdict={p.verdict}")
+            f"got_gain={p.achieved_gain:.3f},moves={p.moves},"
+            f"traffic_gib={p.traffic_bytes / 2**30:.2f},"
+            f"verdict={p.verdict}")
     return out
 
 

@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterator, List, Optional, Tuple
 
+from repro.core import plan as P
 from repro.core import schedule as sched
 from repro.core.notation import Notation
 
@@ -20,7 +21,10 @@ ATTENTION_ARMS = ("none", "recompute", "flash")
 
 @dataclasses.dataclass(frozen=True)
 class Candidate:
-    """One point of the search space.
+    """One point of the search space: a schedule variant plus the two
+    knobs that are not the schedule's identity (micro batch size and
+    attention arm). ``spec(p)`` yields the compiled-plan identity every
+    downstream stage consumes.
 
     ``cap`` is None for non-BPipe kinds and for the BPipe default bound
     (``schedule_cap``); a planner-chosen override otherwise. ``v`` is 1
@@ -32,6 +36,10 @@ class Candidate:
     v: int = 1
     cap: Optional[int] = None
     attention: str = "recompute"
+
+    def spec(self, p: int) -> P.ScheduleSpec:
+        """The candidate's schedule variant on a p-stage pipeline."""
+        return P.ScheduleSpec(self.kind, p, self.m, v=self.v, cap=self.cap)
 
     def label(self) -> str:
         bits = [self.kind, f"b={self.b}", f"m={self.m}"]
@@ -74,12 +82,10 @@ def _caps_for(kind: str, p: int, v: int, deltas: Tuple[int, ...],
     caps: List[Optional[int]] = []
     seen = set()
     # Anything at or above the plain-schedule peak never evicts — the
-    # candidate degenerates to its non-BPipe twin, so clamp there
-    # (stage-0 peak closed forms from docs/schedules.md).
-    if kind == "bpipe":
-        roof = max(min(p, m), 2)
-    else:
-        roof = max(sched.interleaved_peak(p, m, 0, v), 2)
+    # candidate degenerates to its non-BPipe twin, so clamp at the
+    # kind's registered roof (stage-0 peak closed forms; see the
+    # ``ScheduleKind.cap_roof`` entries in core/schedule.py).
+    roof = sched.SCHEDULES[kind].cap_roof(p, m, v)
     for d in deltas:
         cap = min(max(default + d, 2), roof)
         if cap in seen:
@@ -100,17 +106,17 @@ def enumerate_candidates(n: Notation, space: SearchSpace = SearchSpace(),
             m = n.B // b
             for kind in space.kinds:
                 assert kind in sched.SCHEDULES, kind
-                interleaved = kind in sched.INTERLEAVED
-                vs = space.vs if interleaved else (1,)
+                entry = sched.SCHEDULES[kind]
+                vs = space.vs if entry.interleaved else (1,)
                 for v in vs:
-                    if interleaved:
+                    if entry.interleaved:
                         if v < 2 or m % p != 0:
                             continue
                         if num_layers and p * v > num_layers:
                             continue
                     elif num_layers and p > num_layers:
                         continue
-                    if kind in sched.BPIPE_FAMILY:
+                    if entry.balanced:
                         caps = _caps_for(kind, p, v, space.cap_deltas, m)
                     else:
                         caps = [None]
