@@ -1,0 +1,83 @@
+"""Residency-policy sweep: the paper's three-way contest (§4 / Table 3)
+as one mechanism — makespan and peak device memory across
+{bpipe_swap, host_offload, selective_recompute, none} on the two paper
+configs.
+
+Each arm runs the SAME base schedule and the same cap-driven spill
+discipline; only the residency mechanism differs: swap rides the
+NVLink-class pair link, offload the PCIe-class host link, recompute the
+compute frontier (one extra chunk forward per restore). Peak bytes come
+from the residency-aware memory model (spilled units charged their
+retained bytes; offloaded bytes reported as host_gib).
+
+Columns: config, attention, b, kind, res, makespan, mfu_rel (vs the
+unmanaged 1f1b arm), peak_gib, host_gib, moves, traffic_gib, stall.
+"""
+from __future__ import annotations
+
+from repro.core import memory_model as MM
+from repro.core import plan as P
+from repro.core import simulator as SIM
+from repro.core.notation import (GPT3_96B, LLAMA_65B, NVLINK_BW, PCIE_BW,
+                                 Notation)
+from repro.planner import cost_model_for
+
+#: (kind, residency) arms — same spill cap, four places for the stash.
+ARMS = [("1f1b", "none"), ("bpipe", "bpipe_swap"),
+        ("1f1b", "host_offload"), ("1f1b", "selective_recompute")]
+
+CASES = [("gpt3-96b", GPT3_96B, "recompute", 2),
+         ("llama-65b", LLAMA_65B, "recompute", 4)]
+
+SMOKE_N = Notation(a=4, b=2, h=256, l=16, s=128, v=512, B=16, p=4, t=1)
+SMOKE_CASES = [("smoke", SMOKE_N, "recompute", 2)]
+
+
+def _arm_row(n: Notation, att: str, b: int, kind: str, res: str,
+             cost) -> dict:
+    nb = n.replace(b=b)
+    spec = P.ScheduleSpec(kind, n.p, nb.num_micro, residency=res)
+    T = cost.stage_T(nb, att)
+    sim = SIM.simulate(SIM.SimConfig(
+        spec=spec, Tf=T / 3.0, Tb=2.0 * T / 3.0,
+        evict_bytes=(MM.eviction_bytes(nb, att, spec.v)
+                     if spec.policy.moves_data else 0.0),
+        pair_bw=NVLINK_BW, d2h_bw=PCIE_BW, h2d_bw=PCIE_BW))
+    mems = MM.per_stage_memory(nb, att, spec)
+    return {
+        "spec": spec, "makespan": sim.makespan, "stall": sim.load_stall,
+        "peak_gib": max(m.total for m in mems) / 2**30,
+        "host_gib": max(m.host_bytes for m in mems) / 2**30,
+        "moves": P.num_moves(spec),
+        "traffic_gib": MM.traffic_bytes(nb, att, spec) / 2**30,
+    }
+
+
+def main(print_csv=True, smoke=False):
+    rows = []
+    for name, n, att, b in (SMOKE_CASES if smoke else CASES):
+        # the cheap analytic model in smoke; Table 5 curves otherwise
+        if smoke:
+            cost = cost_model_for(None)
+        else:
+            from repro.configs import get_config
+            cost = cost_model_for(get_config(name))
+        base = None
+        for kind, res in ARMS:
+            r = _arm_row(n, att, b, kind, res, cost)
+            if base is None:
+                base = r["makespan"]
+            rel = base / r["makespan"]
+            rows.append((name, att, b, kind, res, r))
+            if print_csv:
+                print(f"residency_sweep,{name},{att},b={b},{kind},res={res},"
+                      f"makespan={r['makespan']:.4g},mfu_rel={rel:.3f},"
+                      f"peak_gib={r['peak_gib']:.2f},"
+                      f"host_gib={r['host_gib']:.2f},moves={r['moves']},"
+                      f"traffic_gib={r['traffic_gib']:.2f},"
+                      f"stall={r['stall']:.3g}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ Prints ``name,...`` CSV rows:
   table5             paper §4 estimation validation (eq. 4 pairs)
   memory_balance     paper Fig. 1 / A100 fit analysis (1F1B vs BPipe)
   interleaved_sweep  beyond-paper: interleaved 1F1B/BPipe bubble-memory
+  residency_sweep    activation-residency contest: swap/offload/recompute
   estimator_accuracy eq.4 vs discrete-event simulator across a grid
   kernel_bench       Pallas kernels + §3.2 fusion-count analysis
   roofline           per-(arch x shape) roofline terms from the dry-run
@@ -46,12 +47,13 @@ def main(argv=None) -> None:
 
     from benchmarks import (estimator_accuracy, interleaved_sweep,
                             kernel_bench, memory_balance, planner_sweep,
-                            roofline_table, table3, table5)
+                            residency_sweep, roofline_table, table3, table5)
     mods = {
         "table3": table3,
         "table5": table5,
         "memory_balance": memory_balance,
         "interleaved_sweep": interleaved_sweep,
+        "residency_sweep": residency_sweep,
         "estimator_accuracy": estimator_accuracy,
         "kernel_bench": kernel_bench,
         "roofline": roofline_table,

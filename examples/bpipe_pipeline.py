@@ -89,13 +89,19 @@ def main():
         m = 8 // args.micro
         specs = [best.cand.spec(p)]
     else:
-        kinds = ["gpipe", "1f1b", "bpipe"]
+        arms = [("gpipe", "none"), ("1f1b", "none"), ("bpipe", "none")]
+        # the other two residency mechanisms on the same 1F1B schedule:
+        # host offload (real device_put) and selective recompute
+        arms += [("1f1b", "host_offload"), ("1f1b", "selective_recompute")]
         # interleaved streams need m to be a multiple of p and v >= 2
         if m % p == 0 and args.v >= 2:
-            kinds += ["1f1b_interleaved", "bpipe_interleaved"]
-        specs = [ScheduleSpec(kind, p, m, v=args.v) for kind in kinds]
+            arms += [("1f1b_interleaved", "none"),
+                     ("bpipe_interleaved", "none")]
+        specs = [ScheduleSpec(kind, p, m, v=args.v, residency=res)
+                 for kind, res in arms]
     for spec in specs:
-        kind = spec.kind
+        kind = spec.kind if spec.residency in ("none", "bpipe_swap") \
+            else f"{spec.kind}+{spec.residency}"
         ex = PipelineExecutor(cfg, spec=spec, micro_batch=args.micro)
         params_k, opt = params, adam.init(params)
         losses = []
@@ -111,8 +117,11 @@ def main():
             events = res.events or events
         peaks = [stats.peak_local[i] for i in range(p)]
         print(f"{kind:>6}: losses {['%.3f' % l for l in losses]}")
-        print(f"        peak stash/stage {peaks}  "
-              f"evictions={stats.evictions} loads={stats.loads} "
+        moves = (f"evictions={stats.evictions} loads={stats.loads}"
+                 if stats.offloads == stats.drops == 0 else
+                 f"offloads={stats.offloads} fetches={stats.fetches} "
+                 f"drops={stats.drops} recomputes={stats.recomputes}")
+        print(f"        peak stash/stage {peaks}  {moves} "
               f"moved={stats.bytes_moved/2**20:.1f}MiB(modelled)")
         if events:
             # close the loop: trace -> recalibrate -> simulate

@@ -12,6 +12,16 @@ cd "$(dirname "$0")/.."
 
 python -m compileall -q src benchmarks examples tests
 
+# Architecture guard: exactly ONE ready-instruction dispatch loop exists
+# (plan.run). A second "while remaining" loop means a module grew its own
+# scheduler again — the regression the compiled-plan refactor removed.
+loops=$(grep -rl "while remaining" src/repro)
+if [ "$loops" != "src/repro/core/plan.py" ]; then
+    echo "ready-loop guard failed: expected only src/repro/core/plan.py," >&2
+    echo "found: $loops" >&2
+    exit 1
+fi
+
 # Benchmark suite on tiny CPU-only shapes (includes the planner sweep
 # over the two smallest configs) — schedule/planner regressions fail
 # here, not just in tier-1.

@@ -81,6 +81,7 @@ class StageMemory:
     peak_stash: int           # activations held at peak (incl. foreign)
     act_bytes: float
     param_bytes: float
+    host_bytes: float = 0.0   # host-DRAM bytes at peak (host_offload)
 
     @property
     def total(self) -> float:
@@ -93,16 +94,29 @@ def per_stage_memory(n: Notation, attention: str, kind: KindOrSpec,
     """Peak memory per pipeline stage under the given schedule variant
     (a ``ScheduleSpec``, or the legacy kind/v/cap knobs). Stash-unit
     counts come from the compiled plan's peak accounting; for interleaved
-    kinds each unit is byte-weighted at 1/v of the device's layers."""
+    kinds each unit is byte-weighted at 1/v of the device's layers.
+
+    Residency policies change what a *released* unit costs: units
+    spilled off the device store (``Schedule.peak_spilled``) are charged
+    the policy's ``retained_bytes`` on the device (the boundary input
+    for selective_recompute, nothing for host_offload — whose full unit
+    bytes land in ``host_bytes`` instead)."""
     spec = _as_spec(kind, n, v, cap)
-    peaks = P.compile_plan(spec).peak_stash
+    sch = P.compile_plan(spec)
+    peaks = sch.peak_stash
+    spilled = sch.peak_spilled
+    pol = spec.policy
     per_mb = act_bytes_per_stage(n, attention, spec.v)
+    retained = pol.retained_bytes(n, attention, spec.v)
     pb = param_bytes_per_stage(n, cfg)
     out = []
     for i in range(n.p):
+        spill = spilled.get(i, 0)
         out.append(StageMemory(
             stage=i, peak_stash=peaks[i],
-            act_bytes=peaks[i] * per_mb, param_bytes=pb))
+            act_bytes=peaks[i] * per_mb + spill * retained,
+            param_bytes=pb,
+            host_bytes=spill * per_mb if pol.mechanism == "host" else 0.0))
     return out
 
 
@@ -150,11 +164,16 @@ def eviction_bytes(n: Notation, attention: str, v: int = 1) -> float:
 
 
 def traffic_bytes(n: Notation, attention: str, spec: P.ScheduleSpec) -> float:
-    """Total evictor<->acceptor bytes one step of ``spec`` moves: the
-    EVICT+LOAD count of the stream actually built (``plan.num_moves`` —
-    cap- and v-aware) times the per-unit stash bytes. 0 for unbalanced
-    kinds."""
+    """Total residency bytes one step of ``spec`` moves over a link: the
+    release+restore count of the stream actually built
+    (``plan.num_moves`` — cap-, v- and residency-aware) times the
+    per-unit stash bytes. Covers the partner swap (evictor<->acceptor)
+    and host offload (D2H+H2D) alike; 0 when residency moves no data
+    (none, or selective_recompute — whose bill is FLOPs, priced by the
+    simulator's RECOMPUTE handler)."""
     spec = _as_spec(spec, n)
+    if not spec.policy.moves_data:
+        return 0.0
     return P.num_moves(spec) * eviction_bytes(n, attention, spec.v)
 
 

@@ -49,3 +49,4 @@ TPU_V5E_ICI_BW = 50e9
 TPU_V5E_HBM_BYTES = 16 * 1024**3
 A100_HBM_BYTES = 80 * 1024**3
 NVLINK_BW = 300e9  # effective per-direction A100 NVLink
+PCIE_BW = 25e9     # effective per-direction PCIe gen4 x16 (host offload)

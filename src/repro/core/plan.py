@@ -33,6 +33,10 @@ from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
 
 from repro.core import schedule as sched
 from repro.core.schedule import B, EVICT, F, LOAD, Instr
+# Importing the policy module via the package registers the built-in
+# residency policies (none / bpipe_swap / host_offload /
+# selective_recompute) before any spec validates against them.
+from repro.memory import policy as respol
 
 # Dependency edge: completion of (op, stage, mb, chunk) upstream.
 DepKey = Tuple[str, int, int, int]
@@ -52,10 +56,17 @@ class ScheduleSpec:
             template the executor binds to the real batch at ``step()``
             (``with_m``); compiling requires a bound spec.
       v:    virtual chunks per device; normalized to 1 for plain kinds.
-      cap:  stash-cap override for balanced (BPipe-family) kinds;
-            normalized to None when it equals the kind's default bound
-            (and for kinds that take no cap), so two spellings of the
-            same variant hash and compare equal.
+      cap:  local-stash bound override for balanced (BPipe-family) kinds
+            and for active residency policies on plain kinds; normalized
+            to None when it equals the default bound (and when nothing
+            caps the stash), so two spellings of the same variant hash
+            and compare equal.
+      residency: where a stashed activation lives between its F and its
+            B (``repro.memory.policy.POLICIES``). Balanced kinds embed
+            the partner swap, so their residency normalizes to
+            ``"bpipe_swap"``; unbalanced kinds accept ``"none"``,
+            ``"host_offload"``, ``"selective_recompute"`` (or any
+            registered policy whose mechanism is not the swap).
 
     Specs are frozen and hashable — they key the compile cache and can be
     used as dict keys / set members anywhere a "schedule variant" is
@@ -66,6 +77,7 @@ class ScheduleSpec:
     m: int = 0
     v: int = 1
     cap: Optional[int] = None
+    residency: str = "none"
 
     def __post_init__(self):
         entry = sched.SCHEDULES.get(self.kind)
@@ -73,6 +85,26 @@ class ScheduleSpec:
             raise ValueError(
                 f"unknown schedule kind {self.kind!r}; "
                 f"registered: {sorted(sched.SCHEDULES)}")
+        pol = respol.POLICIES.get(self.residency)
+        if pol is None:
+            raise ValueError(
+                f"unknown residency policy {self.residency!r}; "
+                f"registered: {sorted(respol.POLICIES)}")
+        if entry.balanced:
+            # balanced kinds ARE the swap policy (their builders emit
+            # EVICT/LOAD); normalize so the spec says so, and reject a
+            # contradictory residency rather than silently dropping it
+            if self.residency not in ("none", respol.BPIPE_SWAP.name):
+                raise ValueError(
+                    f"{self.kind} embeds the partner swap; "
+                    f"residency={self.residency!r} conflicts — use the "
+                    f"unbalanced base kind for other policies")
+            object.__setattr__(self, "residency", respol.BPIPE_SWAP.name)
+            pol = respol.BPIPE_SWAP
+        elif pol.swap:
+            raise ValueError(
+                f"residency {self.residency!r} is the balanced kinds' "
+                f"built-in mechanism; use the bpipe twin of {self.kind!r}")
         if self.p < 1:
             raise ValueError(f"p must be >= 1, got {self.p}")
         if self.m < 0:
@@ -96,6 +128,14 @@ class ScheduleSpec:
                         f"in-flight LOAD transient), got {self.cap}")
                 if self.cap == entry.default_cap(self.p, self.v):
                     object.__setattr__(self, "cap", None)
+        elif pol.active:
+            if self.cap is not None:
+                if self.cap < 2:
+                    raise ValueError(
+                        f"cap must be >= 2 (one live forward + the "
+                        f"in-flight restore transient), got {self.cap}")
+                if self.cap == pol.default_cap(self.p, self.v):
+                    object.__setattr__(self, "cap", None)
         else:
             object.__setattr__(self, "cap", None)
 
@@ -113,16 +153,25 @@ class ScheduleSpec:
         return self.entry.balanced
 
     @property
+    def policy(self) -> "respol.ResidencyPolicy":
+        """The residency policy governing where stashes live."""
+        return respol.POLICIES[self.residency]
+
+    @property
     def n_virtual(self) -> int:
         return self.p * self.v
 
     @property
     def resolved_cap(self) -> Optional[int]:
         """The effective per-device stash bound (None = unbounded)."""
-        if not self.balanced:
-            return None
-        return self.cap if self.cap is not None \
-            else self.entry.default_cap(self.p, self.v)
+        if self.balanced:
+            return self.cap if self.cap is not None \
+                else self.entry.default_cap(self.p, self.v)
+        pol = self.policy
+        if pol.active:
+            return self.cap if self.cap is not None \
+                else pol.default_cap(self.p, self.v)
+        return None
 
     @property
     def bound(self) -> bool:
@@ -137,19 +186,32 @@ class ScheduleSpec:
         bits = [self.kind, f"p={self.p}", f"m={self.m}"]
         if self.interleaved:
             bits.append(f"v={self.v}")
-        if self.balanced:
+        if not self.balanced and self.policy.active:
+            bits.append(f"res={self.residency}")
+        if self.balanced or self.policy.active:
             bits.append(f"cap={self.cap if self.cap is not None else 'def'}")
         return " ".join(bits)
 
     def to_dict(self) -> Dict[str, Any]:
         return {"kind": self.kind, "p": self.p, "m": self.m,
-                "v": self.v, "cap": self.cap}
+                "v": self.v, "cap": self.cap, "residency": self.residency}
+
+    #: Exactly the keys ``to_dict`` emits — ``from_dict`` rejects anything
+    #: else so a typo'd or stale spec JSON fails loudly instead of
+    #: silently dropping a dimension.
+    DICT_KEYS = frozenset(("kind", "p", "m", "v", "cap", "residency"))
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "ScheduleSpec":
+        unknown = sorted(set(d) - cls.DICT_KEYS)
+        if unknown:
+            raise ValueError(
+                f"unknown ScheduleSpec keys {unknown}; "
+                f"allowed: {sorted(cls.DICT_KEYS)}")
         return cls(kind=d["kind"], p=int(d["p"]), m=int(d.get("m", 0)),
                    v=int(d.get("v", 1)),
-                   cap=None if d.get("cap") is None else int(d["cap"]))
+                   cap=None if d.get("cap") is None else int(d["cap"]),
+                   residency=str(d.get("residency", "none")))
 
 
 # ---------------------------------------------------------------------------
@@ -208,10 +270,14 @@ def _plan_stream(spec: ScheduleSpec, stage: int,
                 ni, nc = (vs + 1) % p, (vs + 1) // p
                 dep = (B, ni, ins.mb, nc)
                 hop = ni != stage
-        elif ins.op == EVICT:
+        elif ins.op in respol.RELEASE_OPS:
+            # any residency release (EVICT/OFFLOAD/DROP/...) waits on the
+            # unit's own forward
             dep = (F, stage, ins.mb, ins.chunk)
-        elif ins.op == LOAD:
-            dep = (EVICT, stage, ins.mb, ins.chunk)
+        elif ins.op in respol.RESTORE_OPS:
+            # any restore (LOAD/FETCH/RECOMPUTE/...) waits on its release
+            dep = (respol.RESTORE_OPS[ins.op].release_op,
+                   stage, ins.mb, ins.chunk)
         else:
             raise ValueError(f"unknown op {ins.op!r}")
         out.append(PlannedInstr(ins.op, stage, ins.mb, ins.chunk, vs,
@@ -234,8 +300,12 @@ class Schedule:
     legitimately raises the acceptor's peak above the uniform number);
     ``peak_stash`` the per-stage peak unit count (local + accepted
     foreign) that feeds the memory model and planner feasibility;
-    ``num_evictions``/``num_loads`` the per-stage move counts that feed
-    traffic accounting.
+    ``peak_spilled`` the per-stage peak count of units released off the
+    device store by a non-swap residency policy (host-resident for
+    offload, residual-freed for recompute — byte-weighted per policy by
+    the memory model); ``num_evictions``/``num_loads`` the per-stage
+    release/restore op counts (EVICT/LOAD for the swap, OFFLOAD/FETCH,
+    DROP/RECOMPUTE, ...) that feed traffic accounting.
     """
     spec: ScheduleSpec
     streams: Mapping[int, Tuple[PlannedInstr, ...]]
@@ -245,6 +315,7 @@ class Schedule:
     peak_stash: Mapping[int, int]
     num_evictions: Mapping[int, int]
     num_loads: Mapping[int, int]
+    peak_spilled: Mapping[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def p(self) -> int:
@@ -289,17 +360,25 @@ def compile_plan(spec: ScheduleSpec) -> Schedule:
         raise ValueError(f"cannot compile unbound spec (m=0): {spec}")
     p = spec.p
     entry = spec.entry
-    streams = {
-        i: _plan_stream(spec, i, entry.stream(p, spec.m, i, spec.v, spec.cap))
-        for i in range(p)}
-    partner = partner_map(p) if spec.balanced else {}
-    traces, counts = stash_accounting(streams, p, partner)
-    peaks = {i: (max(t) if t else 0) for i, t in traces.items()}
-    evictions = {i: sum(1 for x in streams[i] if x.op == EVICT)
-                 for i in range(p)}
-    loads = {i: sum(1 for x in streams[i] if x.op == LOAD)
-             for i in range(p)}
+    pol = spec.policy
     cap = spec.resolved_cap
+
+    def raw(i: int) -> sched.Stream:
+        base = entry.stream(p, spec.m, i, spec.v, spec.cap)
+        if entry.balanced or not pol.active:
+            # balanced builders embed their own spill (EVICT/LOAD)
+            return base
+        return pol.rewrite(base, cap)
+
+    streams = {i: _plan_stream(spec, i, raw(i)) for i in range(p)}
+    partner = partner_map(p) if spec.balanced else {}
+    traces, spill_traces, counts = _account(streams, p, partner)
+    peaks = {i: (max(t) if t else 0) for i, t in traces.items()}
+    spilled = {i: (max(t) if t else 0) for i, t in spill_traces.items()}
+    releases = {i: sum(1 for x in streams[i] if x.op in respol.RELEASE_OPS)
+                for i in range(p)}
+    restores = {i: sum(1 for x in streams[i] if x.op in respol.RESTORE_OPS)
+                for i in range(p)}
     if cap is None:
         bounds: Dict[int, Optional[int]] = {i: None for i in range(p)}
     elif spec.cap is not None:
@@ -308,15 +387,18 @@ def compile_plan(spec: ScheduleSpec) -> Schedule:
         bounds = {i: cap for i in range(p)}
     return Schedule(spec=spec, streams=streams, partner=partner, cap=cap,
                     bounds=bounds, peak_stash=peaks,
-                    num_evictions=evictions, num_loads=loads)
+                    num_evictions=releases, num_loads=restores,
+                    peak_spilled=spilled)
 
 
 def num_moves(spec: ScheduleSpec) -> int:
-    """Total EVICT + LOAD instructions one step of ``spec`` performs —
-    the traffic count the planner charges eviction bandwidth with.
-    Covers every balanced kind and cap override (the counts come from the
-    stream actually built, not a closed form); 0 for unbalanced kinds."""
-    if not spec.balanced:
+    """Total release + restore instructions one step of ``spec``
+    performs (EVICT+LOAD, OFFLOAD+FETCH, DROP+RECOMPUTE, ...) — the
+    count the planner charges bandwidth (or recompute FLOPs) with.
+    Covers every balanced kind, residency policy and cap override (the
+    counts come from the stream actually built, not a closed form); 0
+    when nothing manages residency."""
+    if not spec.balanced and not spec.policy.active:
         return 0
     return compile_plan(spec).moves
 
@@ -382,20 +464,27 @@ def run(streams: Mapping[int, Sequence[Any]],
     return done
 
 
-def stash_accounting(streams: Mapping[int, Sequence[Any]], p: int,
-                     partner: Optional[Mapping[int, int]] = None,
-                     ) -> Tuple[Dict[int, List[int]], Dict[int, int]]:
-    """Replay ``streams`` through the engine with counting handlers.
+def _account(streams: Mapping[int, Sequence[Any]], p: int,
+             partner: Optional[Mapping[int, int]] = None,
+             ) -> Tuple[Dict[int, List[int]], Dict[int, List[int]],
+                        Dict[int, int]]:
+    """Replay ``streams`` through the engine with counting handlers for
+    the full registered op set.
 
-    Returns ``(traces, counts)``: per-stage traces of LOCAL stashed-unit
-    counts after each event (including foreign stashes accepted from the
-    paired evictor) and the final counts (all zero for a well-formed
-    schedule). Works on raw ``Instr`` and compiled ``PlannedInstr``
-    streams alike — the handlers only read ``op``.
+    Returns ``(traces, spill_traces, counts)``: per-stage traces of
+    device-resident stashed-unit counts after each event (including
+    foreign stashes accepted from the paired evictor), per-stage traces
+    of units spilled OFF the device store by a non-swap policy
+    (host-resident / residual-freed), and the final device counts (all
+    zero for a well-formed schedule). Works on raw ``Instr`` and
+    compiled ``PlannedInstr`` streams alike — the handlers only read
+    ``op``.
     """
     partner = partner_map(p) if partner is None else partner
     counts = {i: 0 for i in range(p)}
+    spilled = {i: 0 for i in range(p)}
     traces: Dict[int, List[int]] = {i: [] for i in range(p)}
+    spill_traces: Dict[int, List[int]] = {i: [] for i in range(p)}
 
     def bump(i: int, delta: int) -> None:
         counts[i] += delta
@@ -407,18 +496,40 @@ def stash_accounting(streams: Mapping[int, Sequence[Any]], p: int,
     def on_b(i, ins):
         bump(i, -1)
 
-    def on_evict(i, ins):
+    def on_release(i, ins):
         counts[i] -= 1
-        counts[partner[i]] += 1
-        traces[partner[i]].append(counts[partner[i]])
+        if respol.RELEASE_OPS[ins.op].swap:
+            counts[partner[i]] += 1
+            traces[partner[i]].append(counts[partner[i]])
+        else:
+            spilled[i] += 1
+            spill_traces[i].append(spilled[i])
         traces[i].append(counts[i])
 
-    def on_load(i, ins):
+    def on_restore(i, ins):
         counts[i] += 1
-        counts[partner[i]] -= 1
-        traces[partner[i]].append(counts[partner[i]])
+        if respol.RESTORE_OPS[ins.op].swap:
+            counts[partner[i]] -= 1
+            traces[partner[i]].append(counts[partner[i]])
+        else:
+            spilled[i] -= 1
+            spill_traces[i].append(spilled[i])
         traces[i].append(counts[i])
 
-    run(streams, {F: on_f, B: on_b, EVICT: on_evict, LOAD: on_load},
-        greedy=False)
+    handlers: Dict[str, Handler] = {F: on_f, B: on_b}
+    for op in respol.RELEASE_OPS:
+        handlers[op] = on_release
+    for op in respol.RESTORE_OPS:
+        handlers[op] = on_restore
+    run(streams, handlers, greedy=False)
+    return traces, spill_traces, counts
+
+
+def stash_accounting(streams: Mapping[int, Sequence[Any]], p: int,
+                     partner: Optional[Mapping[int, int]] = None,
+                     ) -> Tuple[Dict[int, List[int]], Dict[int, int]]:
+    """Device-resident stash accounting (the legacy two-tuple view of
+    ``_account`` — spill traces are the compiled ``Schedule``'s
+    ``peak_spilled`` business)."""
+    traces, _, counts = _account(streams, p, partner)
     return traces, counts

@@ -1,10 +1,17 @@
 """Pipeline schedules as per-stage instruction streams.
 
-Ops:
+Core ops:
   F(mb)      forward of microbatch mb
   B(mb)      backward of microbatch mb
-  EVICT(mb)  (BPipe, evictor only) ship mb's stashed activation to partner
-  LOAD(mb)   (BPipe, evictor only) fetch it back ahead of B(mb)
+
+Residency ops (inserted by ``repro.memory`` policies — docs/memory.md):
+  EVICT(mb)      (bpipe_swap) ship mb's stashed activation to the partner
+  LOAD(mb)       (bpipe_swap) fetch it back ahead of B(mb)
+  OFFLOAD(mb)    (host_offload) copy the stash to host memory (D2H)
+  FETCH(mb)      (host_offload) copy it back ahead of B(mb) (H2D)
+  DROP(mb)       (selective_recompute) free the vjp residuals, keep the
+                 boundary input
+  RECOMPUTE(mb)  (selective_recompute) re-run the forward ahead of B(mb)
 
 The streams are *data*. This module holds the stream builders and the
 declarative kind registry (``SCHEDULES`` / ``register``); compiling a
@@ -12,7 +19,10 @@ stream set into a dispatchable artifact — dependency edges, partner map,
 stash bounds, peak accounting — is ``core.plan``'s job, and every
 consumer (simulator, executor, memory model, planner) runs off that
 compiled ``plan.Schedule``. Registering a kind here is the ONE step that
-makes it plannable, simulable, and executable (docs/api.md).
+makes it plannable, simulable, and executable (docs/api.md). Where a
+stashed activation *lives* between its F and its B is the orthogonal
+residency axis: ``repro.memory.policy`` owns those rewrites and the
+registry that extends the op set.
 """
 from __future__ import annotations
 
@@ -20,6 +30,8 @@ import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
 F, B, EVICT, LOAD = "F", "B", "EVICT", "LOAD"
+OFFLOAD, FETCH = "OFFLOAD", "FETCH"
+DROP, RECOMPUTE = "DROP", "RECOMPUTE"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,37 +82,12 @@ def bpipe_pairs(p: int) -> List[Tuple[int, int]]:
 
 
 def _balance(base: Stream, cap: int) -> Stream:
-    """BPipe's continuous balancing over any F/B stream: whenever the
-    local stash would exceed ``cap`` (including the in-flight LOAD
-    transient), the unit whose backward is farthest away (the newest
-    held) is shipped to the partner right after a forward, and fetched
-    back just before its own backward. Units are (mb, chunk)."""
-    evicted: set = set()
-    held: list = []                   # local stash, oldest first
-    out: Stream = []
-    for pos, ins in enumerate(base):
-        key = (ins.mb, ins.chunk)
-        if ins.op == F:
-            # Will the next backward's LOAD land while this F's output is
-            # still held? Then budget one extra slot for it.
-            nxt = base[pos + 1] if pos + 1 < len(base) else None
-            pending = 1 if (nxt is not None and nxt.op == B
-                            and (nxt.mb, nxt.chunk) in evicted) else 0
-            # Proactively make room *before* computing the forward.
-            while len(held) + 1 + pending > cap:
-                vmb, vchunk = held.pop()   # newest held
-                out.append(Instr(EVICT, vmb, vchunk))
-                evicted.add((vmb, vchunk))
-            out.append(ins)
-            held.append(key)
-        else:  # B
-            if key in evicted:
-                out.append(Instr(LOAD, ins.mb, ins.chunk))
-                evicted.discard(key)
-                held.append(key)
-            out.append(ins)
-            held.remove(key)
-    return out
+    """BPipe's continuous balancing over any F/B stream (re-homed to
+    ``repro.memory.policy.spill`` — the cap-driven rewrite is shared by
+    every residency policy; this wrapper pins the EVICT/LOAD op pair the
+    balanced schedule kinds emit)."""
+    from repro.memory.policy import spill
+    return spill(base, cap, EVICT, LOAD)
 
 
 def bpipe(p: int, m: int, stage: int, cap: int | None = None) -> Stream:

@@ -18,12 +18,20 @@ Model:
     finish before B(mb, chunk) starts. LOAD prefetch is issued one
     *chunk-level* F+B slot ((Tf+Tb)/v) ahead of the backward it feeds,
     so interleaved BPipe load-stall is charged at chunk granularity, not
-    a whole-device slot (pinned by tests/test_plan.py).
+    a whole-device slot (pinned by tests/test_plan.py),
+  * residency ops (``repro.memory``): OFFLOAD/FETCH are async copies on
+    the per-device host link (bytes / d2h_bw resp. h2d_bw, serialized
+    per direction; FETCH prefetched like LOAD and stalling B the same
+    way), DROP is free bookkeeping, and RECOMPUTE occupies the stage's
+    compute frontier for one chunk-level forward (Tf/v) — the FLOPs bill
+    of recomputation. Pricing handlers are derived from the policy
+    registry's mechanism field, so a newly registered policy's ops are
+    priced without edits here.
 
 The schedule itself — streams, dependency edges, device hops, partner
 map — comes precompiled from ``plan.compile_plan``; this module only
-prices instructions. Makespans across plain/interleaved/BPipe variants
-are directly comparable.
+prices instructions. Makespans across plain/interleaved/BPipe/residency
+variants are directly comparable.
 """
 from __future__ import annotations
 
@@ -31,7 +39,8 @@ import dataclasses
 from typing import Dict, List, Optional
 
 from repro.core import plan as P
-from repro.core.schedule import B, EVICT, F, LOAD
+from repro.core.schedule import B, F
+from repro.memory import policy as respol
 
 
 @dataclasses.dataclass
@@ -48,18 +57,22 @@ class SimConfig:
     Tf: float = 0.0             # forward time per microbatch per device
     Tb: float = 0.0             # backward time (typically 2*Tf)
     t_p2p: float = 0.0          # stage-boundary activation transfer
-    evict_bytes: float = 0.0    # bytes per EVICT/LOAD
+    evict_bytes: float = 0.0    # bytes per residency move (EVICT/OFFLOAD/..)
     pair_bw: float = float("inf")
     pair_hops: int = 1
+    d2h_bw: float = float("inf")   # host link, device -> host (OFFLOAD)
+    h2d_bw: float = float("inf")   # host link, host -> device (FETCH)
     kind: str = "1f1b"
     v: int = 2                  # chunks per device (interleaved kinds only)
-    cap: Optional[int] = None   # BPipe-family stash-cap override
+    cap: Optional[int] = None   # stash-cap override (balanced / residency)
+    residency: str = "none"     # residency policy (plain kinds)
     spec: Optional[P.ScheduleSpec] = None
 
     def __post_init__(self):
         if self.spec is not None:
             self.p, self.m = self.spec.p, self.spec.m
             self.kind, self.cap = self.spec.kind, self.spec.cap
+            self.residency = self.spec.residency
             if self.spec.interleaved:
                 self.v = self.spec.v
 
@@ -67,16 +80,23 @@ class SimConfig:
         """The schedule variant this config prices."""
         if self.spec is not None:
             return self.spec
+        # residency goes into the constructor directly: building a
+        # residency-less spec first would null a cap override (no active
+        # policy -> no cap) before the replace could re-activate it
         return P.ScheduleSpec(self.kind, self.p, self.m, v=self.v,
-                              cap=self.cap)
+                              cap=self.cap, residency=self.residency)
 
 
 @dataclasses.dataclass
 class SimResult:
     makespan: float
     busy: List[float]           # per-stage compute-busy time
-    load_stall: float           # total time backwards waited on LOADs
+    load_stall: float           # total time backwards waited on restores
     timeline: Dict[int, List]   # (op, mb, chunk, start, end) per stage
+    move_time: float = 0.0      # summed residency-op time (link occupancy
+                                # for swap/host moves, re-forward time for
+                                # recompute) — the overhead exposure that
+                                # breaks equal-makespan ties in the planner
 
     @property
     def bubble_fraction(self) -> float:
@@ -93,13 +113,15 @@ def _simulate(cfg: SimConfig) -> SimResult:
     tf, tb = cfg.Tf / v, cfg.Tb / v
     t_move = (cfg.evict_bytes / cfg.pair_bw) * cfg.pair_hops \
         if cfg.evict_bytes else 0.0
+    t_d2h = cfg.evict_bytes / cfg.d2h_bw if cfg.evict_bytes else 0.0
+    t_h2d = cfg.evict_bytes / cfg.h2d_bw if cfg.evict_bytes else 0.0
     partner = schedule.partner
 
     t_stage = {i: 0.0 for i in range(p)}    # stage compute frontier
     done: Dict[P.DepKey, float] = {}        # (op, stage, mb, chunk) -> end
     link_free: Dict[tuple, float] = {}      # pair link serialization
     busy = {i: 0.0 for i in range(p)}
-    state = {"stall": 0.0, "last_b": 0.0}
+    state = {"stall": 0.0, "last_b": 0.0, "move": 0.0}
     timeline: Dict[int, List] = {i: [] for i in range(p)}
 
     def finish(i, ins, start_t, end_t):
@@ -126,10 +148,11 @@ def _simulate(cfg: SimConfig) -> SimResult:
             return P.BLOCKED
         hop = cfg.t_p2p if ins.dep_hop else 0.0
         start_t = max(t_stage[i], dep + hop)
-        le = done.get((LOAD, i, ins.mb, ins.chunk))
-        if le is not None and le > start_t:
-            state["stall"] += le - start_t
-            start_t = le
+        for rop in _stall_ops:     # data-moving restores gate the backward
+            le = done.get((rop, i, ins.mb, ins.chunk))
+            if le is not None and le > start_t:
+                state["stall"] += le - start_t
+                start_t = le
         end_t = start_t + tb
         done[ins.done_key] = end_t
         state["last_b"] = max(state["last_b"], end_t)
@@ -143,6 +166,7 @@ def _simulate(cfg: SimConfig) -> SimResult:
         start_t = max(done[ins.dep], link_free.get(pair, 0.0))
         end_t = start_t + t_move
         done[ins.done_key] = end_t
+        state["move"] += t_move
         link_free[pair] = end_t
         finish(i, ins, start_t, end_t)
 
@@ -154,15 +178,71 @@ def _simulate(cfg: SimConfig) -> SimResult:
         start_t = max(issue, done[ins.dep], link_free.get(pair, 0.0))
         end_t = start_t + t_move
         done[ins.done_key] = end_t
+        state["move"] += t_move
         link_free[pair] = end_t
         finish(i, ins, start_t, end_t)
 
-    P.run(schedule.streams, {F: on_f, B: on_b, EVICT: on_evict,
-                             LOAD: on_load})
+    def on_offload(i, ins):
+        # async D2H copy on the device's host link, serialized per
+        # direction; starts when F(mb, chunk) finished
+        key = ("d2h", i)
+        start_t = max(done[ins.dep], link_free.get(key, 0.0))
+        end_t = start_t + t_d2h
+        done[ins.done_key] = end_t
+        state["move"] += t_d2h
+        link_free[key] = end_t
+        finish(i, ins, start_t, end_t)
+
+    def on_fetch(i, ins):
+        # async H2D prefetch, same chunk-level issue window as LOAD
+        key = ("h2d", i)
+        issue = max(0.0, t_stage[i] - tf - tb)
+        start_t = max(issue, done[ins.dep], link_free.get(key, 0.0))
+        end_t = start_t + t_h2d
+        done[ins.done_key] = end_t
+        state["move"] += t_h2d
+        link_free[key] = end_t
+        finish(i, ins, start_t, end_t)
+
+    def on_drop(i, ins):
+        # freeing residuals is bookkeeping — no time, no link
+        t = done[ins.dep]
+        done[ins.done_key] = t
+        finish(i, ins, t, t)
+
+    def on_recompute(i, ins):
+        # re-run the chunk's forward ON the compute frontier: the FLOPs
+        # bill of recomputation the paper's recompute arms pay
+        start_t = max(t_stage[i], done[ins.dep])
+        end_t = start_t + tf
+        done[ins.done_key] = end_t
+        state["move"] += tf
+        busy[i] += tf
+        t_stage[i] = end_t
+        finish(i, ins, start_t, end_t)
+
+    # Pricing handlers by registered policy mechanism: swap ops ride the
+    # pair link, host ops the per-device host link, recompute ops the
+    # compute frontier. A policy registered by a plugin is priced here
+    # with no simulator edits.
+    handlers = {F: on_f, B: on_b}
+    _mech_release = {"swap": on_evict, "host": on_offload,
+                     "recompute": on_drop}
+    _mech_restore = {"swap": on_load, "host": on_fetch,
+                     "recompute": on_recompute}
+    for op, pol in respol.RELEASE_OPS.items():
+        handlers[op] = _mech_release[pol.mechanism]
+    for op, pol in respol.RESTORE_OPS.items():
+        handlers[op] = _mech_restore[pol.mechanism]
+    _stall_ops = tuple(op for op, pol in respol.RESTORE_OPS.items()
+                       if pol.moves_data)
+
+    P.run(schedule.streams, handlers)
     makespan = max(max(t_stage.values()), state["last_b"])
     return SimResult(makespan=makespan,
                      busy=[busy[i] for i in range(p)],
-                     load_stall=state["stall"], timeline=timeline)
+                     load_stall=state["stall"], timeline=timeline,
+                     move_time=state["move"])
 
 
 # Public entry point. The dispatch loop itself lives in ``plan.run`` —

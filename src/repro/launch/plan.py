@@ -53,8 +53,15 @@ def main(argv=None):
     ap.add_argument("--attention", default="",
                     choices=["", "none", "recompute", "flash"],
                     help="restrict to one attention arm")
+    ap.add_argument("--residency", default="", nargs="*",
+                    help="residency policies to search on plain kinds "
+                         "(default: none host_offload selective_recompute; "
+                         "balanced kinds always carry bpipe_swap)")
     ap.add_argument("--link", default="nvlink", choices=sorted(LINKS),
                     help="evictor<->acceptor link for BPipe traffic")
+    ap.add_argument("--host-bw", type=float, default=0.0,
+                    help="host D2H/H2D bandwidth in GB/s for host_offload "
+                         "(default: PCIe gen4 x16)")
     ap.add_argument("--chip", default="a100", choices=sorted(CHIPS))
     ap.add_argument("--v", type=int, nargs="*", default=[2, 4],
                     help="interleaved chunks-per-device to search")
@@ -85,7 +92,18 @@ def main(argv=None):
     n = from_model(cfg, b=1, s=args.seq, B=args.B, p=args.p, t=args.t)
     attentions = ((args.attention,) if args.attention
                   else ("none", "recompute", "flash"))
-    search = SearchSpace(attentions=attentions, vs=tuple(args.v))
+    kw = {}
+    if args.residency:
+        from repro.memory import policy as respol
+        valid = sorted(n for n, p in respol.POLICIES.items() if not p.swap)
+        for name in args.residency:
+            if name not in valid:
+                # bpipe_swap is registered but not a plain-kind residency
+                # (it is the balanced kinds' built-in mechanism)
+                raise SystemExit(f"unknown --residency {name!r}; known: "
+                                 f"{valid}")
+        kw["residencies"] = tuple(args.residency)
+    search = SearchSpace(attentions=attentions, vs=tuple(args.v), **kw)
 
     if args.trace:
         events = calibrate.load_chrome_trace(args.trace)
@@ -99,7 +117,9 @@ def main(argv=None):
 
     ranked = plan_config(n, cfg, args.hbm_gb * 2**30, cost=cost,
                          search=search, link_bw=LINKS[args.link],
-                         overhead=args.overhead)
+                         overhead=args.overhead,
+                         host_bw=(args.host_bw * 1e9 if args.host_bw
+                                  else None))
     if args.csv:
         for row in report.csv_rows(ranked, "plan", cfg.name):
             print(row)

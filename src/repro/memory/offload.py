@@ -1,0 +1,42 @@
+"""``host_offload`` residency: spill stashed activations to host DRAM.
+
+The SlimPipe-style alternative to BPipe's partner swap: instead of
+shipping the newest held unit to the paired *device*, OFFLOAD copies it
+to host memory over the D2H link and FETCH copies it back ahead of the
+backward. Same spill discipline (``policy.spill``), same cap formulas —
+what changes is the link: host bandwidth (PCIe-class) instead of
+NVLink/ICI, which is exactly the trade the simulator prices
+(``SimConfig.d2h_bw/h2d_bw``) and the planner searches.
+
+In the executor the copy is real: ``jax.vjp``'s returned function is a
+``tree_util.Partial`` pytree whose leaves are the residual arrays, so
+``jax.device_put`` moves the whole stash to the host platform and back
+bit-identically (``to_host`` / ``to_device``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.core.schedule import FETCH, OFFLOAD
+from repro.memory import policy as respol
+
+
+def to_host(stash: Any) -> Any:
+    """Move a stash (any pytree — including a vjp closure) to host
+    memory. Real ``jax.device_put`` onto the CPU platform; on a
+    CPU-only runtime this degenerates to a no-op copy, which keeps the
+    numerics contract (bit-identical round trip) testable anywhere."""
+    import jax
+    return jax.device_put(stash, jax.devices("cpu")[0])
+
+
+def to_device(stash: Any) -> Any:
+    """Move an offloaded stash back to the default accelerator."""
+    import jax
+    return jax.device_put(stash, jax.devices()[0])
+
+
+HOST_OFFLOAD = respol.register(respol.ResidencyPolicy(
+    "host_offload", OFFLOAD, FETCH, mechanism="host",
+    default_cap=respol.residency_cap,
+    cap_roof=respol.residency_cap_roof))

@@ -11,6 +11,13 @@ the byte accounting from ``core.memory_model``; on a multi-device host it
 would be a device_put), and every B consumes its stash and propagates the
 cotangent upstream.
 
+Residency policies (``repro.memory``, a ``ScheduleSpec`` dimension) give
+the stash other places to live: OFFLOAD/FETCH really ``jax.device_put``
+the vjp closure (a ``tree_util.Partial`` pytree) to the host platform
+and back; DROP frees the residuals keeping only the boundary input, and
+RECOMPUTE re-runs the stage forward from it — both bit-identical to the
+resident execution, which ``tests/test_residency.py`` pins.
+
 Interleaved kinds give each device v model chunks: chunk c on device s is
 virtual stage ``c*p + s``; activations flow virtual stage vs -> vs+1 (the
 hop from device p-1 back to device 0 crosses chunks), and every stash /
@@ -42,73 +49,13 @@ from repro.core import memory_model as mm
 from repro.core import plan as P
 from repro.core import schedule as sched
 from repro.core.notation import Notation
-from repro.core.schedule import B, EVICT, F, LOAD
+from repro.core.schedule import B, F
+from repro.memory import offload as mem_offload
+from repro.memory import policy as respol
+# The store is re-homed to repro.memory.store; re-exported here for
+# legacy importers of the executor module.
+from repro.memory.store import ActivationStore, StoreStats, Unit
 from repro.pipeline import stage as stage_mod
-
-Unit = Tuple[int, int]  # (mb, chunk) — one stash unit
-
-
-@dataclasses.dataclass
-class StoreStats:
-    peak_local: Dict[int, int]
-    peak_bytes: Dict[int, float]
-    evictions: int
-    loads: int
-    bytes_moved: float
-
-
-class ActivationStore:
-    """Per-device stash of vjp closures keyed by (mb, chunk), with BPipe
-    eviction accounting. ``local[i]`` holds device i's own residuals;
-    ``foreign[i]`` holds units accepted from the paired evictor, keyed
-    (owner_stage, mb, chunk)."""
-
-    def __init__(self, p: int, bytes_per_stash: float):
-        self.p = p
-        self.bytes_per_stash = bytes_per_stash
-        self.local: List[Dict[Unit, Any]] = [dict() for _ in range(p)]
-        self.foreign: List[Dict[Tuple[int, int, int], Any]] = [
-            dict() for _ in range(p)]
-        self.peak: Dict[int, int] = {i: 0 for i in range(p)}
-        self.evictions = 0
-        self.loads = 0
-        self.bytes_moved = 0.0
-
-    def _bump(self, i):
-        n = len(self.local[i]) + len(self.foreign[i])
-        self.peak[i] = max(self.peak[i], n)
-
-    def held(self, i) -> int:
-        return len(self.local[i]) + len(self.foreign[i])
-
-    def put(self, i, mb, stash, chunk=0):
-        assert (mb, chunk) not in self.local[i], (i, mb, chunk)
-        self.local[i][(mb, chunk)] = stash
-        self._bump(i)
-
-    def pop(self, i, mb, chunk=0):
-        return self.local[i].pop((mb, chunk))
-
-    def evict(self, i, mb, partner, chunk=0):
-        stash = self.local[i].pop((mb, chunk))
-        self.foreign[partner][(i, mb, chunk)] = stash
-        self.evictions += 1
-        self.bytes_moved += self.bytes_per_stash
-        self._bump(partner)
-
-    def load(self, i, mb, partner, chunk=0):
-        stash = self.foreign[partner].pop((i, mb, chunk))
-        self.local[i][(mb, chunk)] = stash
-        self.loads += 1
-        self.bytes_moved += self.bytes_per_stash
-        self._bump(i)
-
-    def stats(self) -> StoreStats:
-        return StoreStats(
-            peak_local=dict(self.peak),
-            peak_bytes={i: n * self.bytes_per_stash for i, n in self.peak.items()},
-            evictions=self.evictions, loads=self.loads,
-            bytes_moved=self.bytes_moved)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,10 +102,13 @@ class PipelineExecutor:
       kind: any registered schedule kind (``schedule.SCHEDULES``).
       v: virtual chunks per device (interleaved kinds only; ignored
         otherwise). Interleaved streams additionally require m % p == 0.
-      cap: BPipe-family stash-cap override (planner-chosen). With a
-        non-default cap the live assertion bounds each stage by the
-        schedule's own per-stage peak accounting (a tighter evictor cap
-        legitimately raises the acceptor's peak above it).
+      cap: BPipe-family / residency stash-cap override (planner-chosen).
+        With a non-default cap the live assertion bounds each stage by
+        the schedule's own per-stage peak accounting (a tighter evictor
+        cap legitimately raises the acceptor's peak above it).
+      residency: activation-residency policy for plain kinds
+        (``repro.memory.policy.POLICIES``; balanced kinds embed
+        ``bpipe_swap``).
 
     Other args:
       cfg: model config (any assigned architecture).
@@ -171,11 +121,13 @@ class PipelineExecutor:
                  remat: str = "none", notation: Optional[Notation] = None,
                  enforce_cap: bool = True, v: int = 2,
                  cap: Optional[int] = None,
+                 residency: str = "none",
                  spec: Optional[P.ScheduleSpec] = None):
         if spec is None:
             assert p is not None, "need p (or pass spec=ScheduleSpec(...))"
             assert kind in sched.SCHEDULES, kind
-            spec = P.ScheduleSpec(kind, p, 0, v=v, cap=cap)
+            spec = P.ScheduleSpec(kind, p, 0, v=v, cap=cap,
+                                  residency=residency)
         else:
             assert p is None or p == spec.p, (p, spec)
         self.spec = spec
@@ -216,8 +168,19 @@ class PipelineExecutor:
             s=seq, v=cfg.vocab_size, B=bsz, p=p, t=1)
         attention = {"none": "none", "attn": "recompute", "full": "recompute",
                      "flash": "flash"}.get(self.remat, "none")
+        policy = self.spec.policy
+        # One stash unit's bytes — the SAME v-chunk weighting
+        # memory_model.act_bytes_per_stage charges, so executor-reported
+        # peak_bytes/bytes_moved agree with the model's per-stage numbers
+        # (each interleaved unit holds 1/v of the device's layers).
+        unit_bytes = mm.act_bytes_per_stage(n, attention, self.v)
         store = ActivationStore(
-            p, mm.act_bytes_per_stage(n, attention, self.v))
+            p, unit_bytes,
+            retained_bytes=policy.retained_bytes(n, attention, self.v))
+        is_recompute = policy.mechanism == "recompute"
+        swap_ops = frozenset(
+            op for op, pol in {**respol.RELEASE_OPS,
+                               **respol.RESTORE_OPS}.items() if pol.swap)
 
         stage_params = self.splitter.split(params)
         schedule = self._schedule_for(m)
@@ -259,11 +222,11 @@ class PipelineExecutor:
                         i, ins.op, ins.mb, ins.chunk,
                         t0 - t_step0, time.perf_counter() - t_step0))
                 if self.enforce_cap and self.cap is not None:
-                    # EVICT/LOAD also touch the partner's store — check
-                    # both ends so acceptor-side transients can't hide
-                    # behind the acceptor's next pop.
+                    # swap ops (EVICT/LOAD) also touch the partner's
+                    # store — check both ends so acceptor-side transients
+                    # can't hide behind the acceptor's next pop.
                     for dev in ((i, partner[i])
-                                if ins.op in (EVICT, LOAD) else (i,)):
+                                if ins.op in swap_ops else (i,)):
                         assert store.held(dev) <= bounds[dev], \
                             (dev, ins, store.held(dev), bounds[dev])
                 return None
@@ -279,7 +242,10 @@ class PipelineExecutor:
                 return P.BLOCKED
             out, vjp_fn = jax.vjp(
                 self.stage_fns[vs], stage_params[vs], carry, micros[ins.mb])
-            store.put(i, ins.mb, vjp_fn, ins.chunk)
+            # recompute residency keeps the boundary input alongside the
+            # residuals: DROP strips to it, RECOMPUTE re-forwards from it
+            store.put(i, ins.mb,
+                      (vjp_fn, carry) if is_recompute else vjp_fn, ins.chunk)
             if vs == nv - 1:
                 losses[ins.mb] = out
             else:
@@ -294,7 +260,8 @@ class PipelineExecutor:
                 cot = grad_in.pop((vs, ins.mb), None)
                 if cot is None:
                     return P.BLOCKED
-            vjp_fn = store.pop(i, ins.mb, ins.chunk)
+            entry = store.pop(i, ins.mb, ins.chunk)
+            vjp_fn = entry[0] if is_recompute else entry
             d_sp, d_carry, _ = vjp_fn(cot)
             grads[vs] = d_sp if grads[vs] is None else jax.tree.map(
                 jnp.add, grads[vs], d_sp)
@@ -308,8 +275,42 @@ class PipelineExecutor:
         def on_load(i, ins):
             store.load(i, ins.mb, partner[i], ins.chunk)
 
-        P.run(schedule.streams, {F: wrap(on_f), B: wrap(on_b),
-                                 EVICT: wrap(on_evict), LOAD: wrap(on_load)})
+        def on_offload(i, ins):
+            # real D2H: the vjp closure is a tree_util.Partial pytree, so
+            # device_put moves the residual arrays to the host platform
+            return store.offload(i, ins.mb, ins.chunk,
+                                 mover=mem_offload.to_host)
+
+        def on_fetch(i, ins):
+            return store.fetch(i, ins.mb, ins.chunk,
+                               mover=mem_offload.to_device)
+
+        def on_drop(i, ins):
+            # free the residuals (the vjp closure reference), keep the
+            # boundary input the re-forward starts from
+            store.drop(i, ins.mb, ins.chunk, strip=lambda e: e[1])
+
+        def on_recompute(i, ins):
+            vs = ins.vs
+            carry = store.dropped_input(i, ins.mb, ins.chunk)
+            out, vjp_fn = jax.vjp(
+                self.stage_fns[vs], stage_params[vs], carry, micros[ins.mb])
+            store.recompute(i, ins.mb, (vjp_fn, carry), ins.chunk)
+            return out
+
+        # Handlers by registered policy mechanism (like the simulator's
+        # pricing set): a plugin policy's ops are executable without
+        # edits here — the registry IS the op set.
+        mech_release = {"swap": on_evict, "host": on_offload,
+                        "recompute": on_drop}
+        mech_restore = {"swap": on_load, "host": on_fetch,
+                        "recompute": on_recompute}
+        handlers = {F: wrap(on_f), B: wrap(on_b)}
+        for op, pol in respol.RELEASE_OPS.items():
+            handlers[op] = wrap(mech_release[pol.mechanism])
+        for op, pol in respol.RESTORE_OPS.items():
+            handlers[op] = wrap(mech_restore[pol.mechanism])
+        P.run(schedule.streams, handlers)
 
         loss = sum(losses.values()) * scale
         full_grads = self.splitter.merge(grads)

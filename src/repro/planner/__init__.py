@@ -1,9 +1,10 @@
 """``repro.planner``: the schedule auto-planner.
 
-Searches the (kind, v, b, m, cap, attention) space for one training
-config, prunes with the analytical memory model, ranks survivors with
-the discrete-event simulator plus the paper's §4 break-even test, and
-calibrates costs from real executor traces. See docs/planner.md.
+Searches the (kind, residency, v, b, m, cap, attention) space for one
+training config, prunes with the analytical memory model, ranks
+survivors with the discrete-event simulator plus the paper's §4
+break-even test, and calibrates costs from real executor traces. See
+docs/planner.md and docs/memory.md (the residency dimension).
 
     from repro.planner import plan_config
     ranked = plan_config(notation, cfg, hbm_bytes=80 * 2**30)
@@ -46,11 +47,14 @@ def plan_config(n: Notation, cfg: Optional[ModelConfig], hbm_bytes: float,
                 link_bw: float = NVLINK_BW,
                 overhead: float = 0.0,
                 workspace: float = feasibility.DEFAULT_WORKSPACE,
+                host_bw: Optional[float] = None,
                 ) -> List[RankedPlan]:
-    """End-to-end: enumerate -> prune -> rank for one config."""
+    """End-to-end: enumerate -> prune -> rank for one config.
+    ``host_bw`` (bytes/s) prices host_offload residency; None = PCIe."""
     if cost is None:
         cost = cost_model_for(cfg)
     cands = space.enumerate_candidates(
         n, search, cfg.num_layers if cfg is not None else 0)
+    kw = {} if host_bw is None else {"host_bw": host_bw}
     return rank.rank(n, cands, cost, hbm_bytes, cfg, link_bw=link_bw,
-                     overhead=overhead, workspace=workspace)
+                     overhead=overhead, workspace=workspace, **kw)

@@ -58,7 +58,9 @@ def fit_trace(events, v: int = 1, b: int = 0) -> CalibratedCosts:
     step)."""
     by_op: Dict[str, List[float]] = {F: [], B: [], EVICT: [], LOAD: []}
     for e in events:
-        by_op[e.op].append(e.duration)
+        # residency ops (OFFLOAD/FETCH/DROP/RECOMPUTE, plugin policies)
+        # are collected too — only F/B/EVICT/LOAD feed the fit
+        by_op.setdefault(e.op, []).append(e.duration)
     assert by_op[F] and by_op[B], "trace has no F/B instructions"
     med = {op: (statistics.median(ds) if ds else 0.0)
            for op, ds in by_op.items()}

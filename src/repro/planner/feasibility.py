@@ -1,10 +1,12 @@
 """Memory feasibility pruning: does a candidate plan fit the HBM budget?
 
 Consumes ``core.memory_model``'s per-stage peak accounting — stash-unit
-counts from the actual schedule streams (cap-aware, v-chunk byte-weighted)
-plus param/optimizer state — and ``core.bpipe``'s pair layout for the
-per-pair hop cost the ranking stage charges eviction traffic with (the
-device-ring-extent hop distances, not the p-sized default).
+counts from the actual schedule streams (cap-, v-chunk- and
+residency-aware: units a policy spills off the device are charged only
+their retained bytes) plus param/optimizer state — and ``core.bpipe``'s
+pair layout for the per-pair hop cost the ranking stage charges eviction
+traffic with (the device-ring-extent hop distances, not the p-sized
+default).
 """
 from __future__ import annotations
 

@@ -32,7 +32,7 @@ from repro.core import plan as plan_mod
 from repro.core import schedule as sched
 from repro.core import simulator as SIM
 from repro.core.flops import model_flops_train, paper_flops
-from repro.core.notation import A100_PEAK_BF16, NVLINK_BW, Notation
+from repro.core.notation import A100_PEAK_BF16, NVLINK_BW, PCIE_BW, Notation
 from repro.planner import feasibility
 from repro.planner.space import ATTENTION_ARMS, Candidate
 
@@ -162,6 +162,7 @@ class RankedPlan:
     stage_T: float = 0.0
     makespan: float = 0.0
     load_stall: float = 0.0
+    move_time: float = 0.0      # summed residency-op time (tie-breaker)
     mfu: float = 0.0            # simulator-derived (fraction)
     mfu_eq3: float = 0.0        # eq. 3 closed form (fraction)
     required_gain: float = 0.0  # break-even vs the arm's 1F1B baseline
@@ -182,13 +183,18 @@ def rank(n: Notation, cands: Iterable[Candidate], cost: CostModel,
          link_bw: float = NVLINK_BW,
          workspace: float = feasibility.DEFAULT_WORKSPACE,
          stage_to_device: Optional[Tuple[int, ...]] = None,
-         overhead: float = 0.0) -> List[RankedPlan]:
+         overhead: float = 0.0,
+         host_bw: float = PCIE_BW) -> List[RankedPlan]:
     """Feasibility-prune, simulate, break-even-test and sort candidates.
 
     ``overhead`` inflates the break-even bar by a fractional BPipe cost
     (``estimator.required_stage_gain``'s knob); 0.0 mirrors the paper's
     "temporarily ignore the overhead" idealization — the simulator still
-    charges the traffic it can see.
+    charges the traffic it can see. ``host_bw`` prices host_offload's
+    D2H/H2D copies (PCIe-class by default — the bandwidth asymmetry vs.
+    ``link_bw`` is exactly what the residency contest is about);
+    selective_recompute is FLOPs-costed by the simulator's RECOMPUTE
+    handler instead.
     """
     plans: List[RankedPlan] = []
     for cand in cands:
@@ -205,12 +211,14 @@ def rank(n: Notation, cands: Iterable[Candidate], cost: CostModel,
         res = SIM.simulate(SIM.SimConfig(
             spec=spec, Tf=T / 3.0, Tb=2.0 * T / 3.0,
             evict_bytes=(mm.eviction_bytes(nb, cand.attention, spec.v)
-                         if spec.balanced else 0.0),
-            pair_bw=link_bw, pair_hops=max(feas.pair_hops, 1)))
+                         if spec.policy.moves_data else 0.0),
+            pair_bw=link_bw, pair_hops=max(feas.pair_hops, 1),
+            d2h_bw=host_bw, h2d_bw=host_bw))
         F = cost.full_flops(n)
         rp.stage_T = T
         rp.makespan = res.makespan
         rp.load_stall = res.load_stall
+        rp.move_time = res.move_time
         # Traffic accounting from the stream actually built (cap- and
         # v-aware), not a default-cap closed form.
         rp.moves = plan_mod.num_moves(spec)
@@ -222,20 +230,35 @@ def rank(n: Notation, cands: Iterable[Candidate], cost: CostModel,
         plans.append(rp)
 
     # §4 break-even pass, per attention arm, against the best feasible
-    # plain-1F1B plan (the paper's baseline schedule).
+    # UNMANAGED plain-1F1B plan (the paper's baseline schedule — a
+    # residency-managed 1f1b is a contender, not the baseline). Every
+    # residency-managed plan faces the same bar: its whole point is
+    # unlocking a larger micro batch, so it must deliver the stage gain
+    # eq. 4 demands, whichever mechanism pays for the memory.
     for att in {p.cand.attention for p in plans}:
         arm = [p for p in plans if p.cand.attention == att]
-        base = max((p for p in arm if p.ok and p.cand.kind == "1f1b"),
+        base_cands = [p for p in arm if p.cand.kind == "1f1b"
+                      and p.cand.residency == "none"]
+        base = max((p for p in base_cands if p.ok),
                    key=lambda p: p.mfu, default=None)
         for p in arm:
-            if not p.ok or p.cand.kind not in sched.BPIPE_FAMILY:
+            c = p.cand
+            managed = (c.kind in sched.BPIPE_FAMILY
+                       or c.residency not in ("none",))
+            if not p.ok or not managed:
                 continue
             if base is None:
-                # no 1F1B fits at any b: BPipe enables training at all
-                p.note = "no feasible 1f1b baseline (BPipe enables the arm)"
+                # distinguish "nothing unmanaged fits" (residency
+                # genuinely enables the arm) from "the caller excluded
+                # the baseline from the search" — only the former is a
+                # claim about memory
+                p.note = ("no feasible 1f1b baseline "
+                          "(residency enables the arm)" if base_cands
+                          else "unmanaged 1f1b baseline not searched "
+                               "(break-even untested)")
                 continue
-            req = _required_gain(n, p.cand, base.cand, overhead)
-            got = cost.stage_gain(n, p.cand.b, base.cand.b, att)
+            req = _required_gain(n, c, base.cand, overhead)
+            got = cost.stage_gain(n, c.b, base.cand.b, att)
             p.required_gain, p.achieved_gain = req, got
             p.baseline_b = base.cand.b
             if got + 1e-12 < req:
@@ -244,7 +267,10 @@ def rank(n: Notation, cands: Iterable[Candidate], cost: CostModel,
                           f"1f1b b={base.cand.b}, got {got:.3f}x")
 
     order = {"ok": 0, "reject": 1, "infeasible": 2}
-    plans.sort(key=lambda p: (order[p.verdict], -p.mfu))
+    # move_time breaks equal-MFU ties: at the same simulated throughput,
+    # prefer the plan with the least residency traffic in flight (less
+    # exposure to link contention the model cannot see).
+    plans.sort(key=lambda p: (order[p.verdict], -p.mfu, p.move_time))
     return plans
 
 

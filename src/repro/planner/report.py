@@ -13,9 +13,15 @@ from repro.core import schedule as sched
 from repro.core.notation import Notation
 from repro.planner.rank import RankedPlan, arms_of, recommend
 
-_COLS = ("#", "kind", "v", "b", "m", "cap", "attn", "peak_GiB",
+_COLS = ("#", "kind", "res", "v", "b", "m", "cap", "attn", "peak_GiB",
          "makespan_s", "MFU%", "eq3%", "req_gain", "got_gain", "moves",
          "verdict")
+
+
+def _managed(c) -> bool:
+    """Does anything manage this candidate's residency (swap policy via a
+    balanced kind, or an active policy on a plain kind)?"""
+    return c.kind in sched.BPIPE_FAMILY or c.residency not in ("none",)
 
 
 def _cell(p: RankedPlan, col: str, idx: int) -> str:
@@ -24,6 +30,12 @@ def _cell(p: RankedPlan, col: str, idx: int) -> str:
         return str(idx)
     if col == "kind":
         return c.kind
+    if col == "res":
+        if c.kind in sched.BPIPE_FAMILY:
+            return "swap"
+        return {"none": "-", "host_offload": "offload",
+                "selective_recompute": "recomp"}.get(c.residency,
+                                                     c.residency)
     if col == "v":
         return str(c.v) if c.kind in sched.INTERLEAVED else "-"
     if col == "b":
@@ -31,7 +43,7 @@ def _cell(p: RankedPlan, col: str, idx: int) -> str:
     if col == "m":
         return str(c.m)
     if col == "cap":
-        if c.kind not in sched.BPIPE_FAMILY:
+        if not _managed(c):
             return "-"
         return str(c.cap) if c.cap is not None else "def"
     if col == "attn":
@@ -49,8 +61,7 @@ def _cell(p: RankedPlan, col: str, idx: int) -> str:
     if col == "got_gain":
         return f"{p.achieved_gain:.3f}" if p.achieved_gain else "-"
     if col == "moves":
-        return str(p.moves) if c.kind in sched.BPIPE_FAMILY and p.makespan \
-            else "-"
+        return str(p.moves) if _managed(c) and p.makespan else "-"
     if col == "verdict":
         return p.verdict if not p.note else f"{p.verdict}: {p.note}"
     raise KeyError(col)
@@ -75,7 +86,8 @@ def csv_rows(ranked: List[RankedPlan], tag: str, config: str) -> List[str]:
     for i, p in enumerate(ranked):
         c = p.cand
         out.append(
-            f"{tag},{config},rank={i + 1},kind={c.kind},v={c.v},b={c.b},"
+            f"{tag},{config},rank={i + 1},kind={c.kind},"
+            f"res={c.residency},v={c.v},b={c.b},"
             f"m={c.m},cap={c.cap if c.cap is not None else 'def'},"
             f"attn={c.attention},peak_gib={p.feas.peak_gib:.2f},"
             f"mfu={100 * p.mfu:.2f},req_gain={p.required_gain:.3f},"
@@ -97,7 +109,9 @@ def recommendation_line(config: str, ranked: List[RankedPlan],
     bits = [c.kind, f"b={c.b}", f"m={c.m}"]
     if c.kind in sched.INTERLEAVED:
         bits.append(f"v={c.v}")
-    if c.kind in sched.BPIPE_FAMILY:
+    if c.residency not in ("none", "bpipe_swap"):
+        bits.append(f"res={c.residency}")
+    if _managed(c):
         bits.append(f"cap={c.cap if c.cap is not None else 'default'}")
     if attention is None:
         bits.append(c.attention)

@@ -1,11 +1,18 @@
-"""The planner's search space: candidate (kind, v, b, m, cap, attention)
-plans for one (model, p, t, B, s) training configuration.
+"""The planner's search space: candidate (kind, residency, v, b, m, cap,
+attention) plans for one (model, p, t, B, s) training configuration.
 
 A candidate is everything the user would otherwise pick by hand per
 config. Enumeration applies only *structural* constraints (b | B,
 interleaving's m % p == 0 and v >= 2, p*v <= num_layers, cap >= 2);
 memory pruning is ``planner.feasibility``'s job and cost ranking is
 ``planner.rank``'s, so each stage of the funnel is testable alone.
+
+Residency is a real dimension: unbalanced kinds pair with every policy
+in ``SearchSpace.residencies`` (each active policy opening its own cap
+ladder), while balanced kinds carry their built-in ``bpipe_swap`` — so
+the planner's three-way contest (swap vs. offload vs. recompute, the
+paper's Table 3 story) falls out of one enumeration instead of
+hard-coded arms.
 """
 from __future__ import annotations
 
@@ -15,6 +22,7 @@ from typing import Iterator, List, Optional, Tuple
 from repro.core import plan as P
 from repro.core import schedule as sched
 from repro.core.notation import Notation
+from repro.memory import policy as respol
 
 ATTENTION_ARMS = ("none", "recompute", "flash")
 
@@ -26,9 +34,11 @@ class Candidate:
     attention arm). ``spec(p)`` yields the compiled-plan identity every
     downstream stage consumes.
 
-    ``cap`` is None for non-BPipe kinds and for the BPipe default bound
-    (``schedule_cap``); a planner-chosen override otherwise. ``v`` is 1
-    for plain kinds.
+    ``cap`` is None when nothing caps the stash and for the default
+    bound (``schedule_cap`` / the policy's ``default_cap``); a
+    planner-chosen override otherwise. ``v`` is 1 for plain kinds.
+    ``residency`` is the activation-residency policy (balanced kinds
+    carry their built-in ``bpipe_swap``).
     """
     kind: str
     b: int
@@ -36,15 +46,19 @@ class Candidate:
     v: int = 1
     cap: Optional[int] = None
     attention: str = "recompute"
+    residency: str = "none"
 
     def spec(self, p: int) -> P.ScheduleSpec:
         """The candidate's schedule variant on a p-stage pipeline."""
-        return P.ScheduleSpec(self.kind, p, self.m, v=self.v, cap=self.cap)
+        return P.ScheduleSpec(self.kind, p, self.m, v=self.v, cap=self.cap,
+                              residency=self.residency)
 
     def label(self) -> str:
         bits = [self.kind, f"b={self.b}", f"m={self.m}"]
         if self.kind in sched.INTERLEAVED:
             bits.append(f"v={self.v}")
+        if self.residency not in ("none", "bpipe_swap"):
+            bits.append(f"res={self.residency}")
         if self.cap is not None:
             bits.append(f"cap={self.cap}")
         bits.append(self.attention)
@@ -54,7 +68,7 @@ class Candidate:
 @dataclasses.dataclass(frozen=True)
 class SearchSpace:
     """Which axes to sweep. Defaults mirror the paper's experiment grid
-    plus the beyond-paper interleaved kinds."""
+    plus the beyond-paper interleaved kinds and residency policies."""
     kinds: Tuple[str, ...] = ("1f1b", "bpipe",
                               "1f1b_interleaved", "bpipe_interleaved")
     attentions: Tuple[str, ...] = ATTENTION_ARMS
@@ -64,6 +78,11 @@ class SearchSpace:
     # memory for less eviction traffic, -k the reverse.
     cap_deltas: Tuple[int, ...] = (0, 1, -1)
     max_b: int = 0          # 0 = up to B
+    # Residency policies paired with each UNBALANCED kind (balanced
+    # kinds embed bpipe_swap). "none" keeps the un-managed baseline in
+    # the table.
+    residencies: Tuple[str, ...] = ("none", "host_offload",
+                                    "selective_recompute")
 
 
 def micro_batch_sizes(B: int, max_b: int = 0) -> List[int]:
@@ -76,16 +95,12 @@ def micro_batch_sizes(B: int, max_b: int = 0) -> List[int]:
     return out
 
 
-def _caps_for(kind: str, p: int, v: int, deltas: Tuple[int, ...],
-              m: int) -> List[Optional[int]]:
-    default = sched.schedule_cap(kind, p, v)
+def _cap_ladder(default: int, roof: int,
+                deltas: Tuple[int, ...]) -> List[Optional[int]]:
+    """Planner cap offsets around a default bound, clamped to [2, roof]
+    (at/above the roof the rewrite degenerates to the unmanaged twin)."""
     caps: List[Optional[int]] = []
     seen = set()
-    # Anything at or above the plain-schedule peak never evicts — the
-    # candidate degenerates to its non-BPipe twin, so clamp at the
-    # kind's registered roof (stage-0 peak closed forms; see the
-    # ``ScheduleKind.cap_roof`` entries in core/schedule.py).
-    roof = sched.SCHEDULES[kind].cap_roof(p, m, v)
     for d in deltas:
         cap = min(max(default + d, 2), roof)
         if cap in seen:
@@ -95,11 +110,26 @@ def _caps_for(kind: str, p: int, v: int, deltas: Tuple[int, ...],
     return caps
 
 
+def _caps_for(kind: str, p: int, v: int, deltas: Tuple[int, ...],
+              m: int) -> List[Optional[int]]:
+    # Anything at or above the plain-schedule peak never evicts — the
+    # candidate degenerates to its non-BPipe twin, so clamp at the
+    # kind's registered roof (stage-0 peak closed forms; see the
+    # ``ScheduleKind.cap_roof`` entries in core/schedule.py).
+    return _cap_ladder(sched.schedule_cap(kind, p, v),
+                       sched.SCHEDULES[kind].cap_roof(p, m, v), deltas)
+
+
+def _residency_caps(pol: "respol.ResidencyPolicy", p: int, v: int,
+                    deltas: Tuple[int, ...], m: int) -> List[Optional[int]]:
+    return _cap_ladder(pol.default_cap(p, v), pol.cap_roof(p, m, v), deltas)
+
+
 def enumerate_candidates(n: Notation, space: SearchSpace = SearchSpace(),
                          num_layers: int = 0) -> Iterator[Candidate]:
     """Yield every structurally valid candidate for Notation ``n``
-    (attention arms x kinds x b x v x cap). ``num_layers`` (0 = skip the
-    check) bounds p*v for interleaved kinds."""
+    (attention arms x kinds x residencies x b x v x cap). ``num_layers``
+    (0 = skip the check) bounds p*v for interleaved kinds."""
     p = n.p
     for attention in space.attentions:
         for b in micro_batch_sizes(n.B, space.max_b):
@@ -117,9 +147,21 @@ def enumerate_candidates(n: Notation, space: SearchSpace = SearchSpace(),
                     elif num_layers and p > num_layers:
                         continue
                     if entry.balanced:
-                        caps = _caps_for(kind, p, v, space.cap_deltas, m)
-                    else:
-                        caps = [None]
-                    for cap in caps:
-                        yield Candidate(kind=kind, b=b, m=m, v=v, cap=cap,
-                                        attention=attention)
+                        # balanced kinds ARE the swap policy; the cap
+                        # ladder is theirs
+                        for cap in _caps_for(kind, p, v, space.cap_deltas,
+                                             m):
+                            yield Candidate(kind=kind, b=b, m=m, v=v,
+                                            cap=cap, attention=attention,
+                                            residency="bpipe_swap")
+                        continue
+                    for residency in space.residencies:
+                        pol = respol.POLICIES.get(residency)
+                        assert pol is not None and not pol.swap, residency
+                        caps = (_residency_caps(pol, p, v, space.cap_deltas,
+                                                m)
+                                if pol.active else [None])
+                        for cap in caps:
+                            yield Candidate(kind=kind, b=b, m=m, v=v,
+                                            cap=cap, attention=attention,
+                                            residency=residency)

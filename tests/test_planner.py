@@ -51,9 +51,8 @@ def test_planner_emits_only_feasible_plans(p, B):
         assert B % c.b == 0 and c.m == B // c.b
         if c.kind in S.INTERLEAVED:
             assert c.v >= 2 and c.m % p == 0
-        # and the memory model agrees, cap-aware and v-chunk-weighted
-        peak = MM.max_stage_bytes(n.replace(b=c.b), c.attention, c.kind,
-                                  v=c.v, cap=c.cap)
+        # and the memory model agrees, cap-, v-chunk- and residency-aware
+        peak = MM.max_stage_bytes(n.replace(b=c.b), c.attention, c.spec(p))
         assert peak <= hbm, (c, peak, hbm)
         assert peak == pytest.approx(rp.feas.peak_bytes)
 
@@ -73,12 +72,13 @@ def test_best_plan_beats_bruteforce_sim_sweep(p, B):
         # brute force: re-simulate every survivor independently
         nb = n.replace(b=c.b)
         T = cost.stage_T(nb, c.attention)
+        spec = c.spec(p)
         res = SIM.simulate(SIM.SimConfig(
-            p=p, m=c.m, Tf=T / 3.0, Tb=2.0 * T / 3.0, kind=c.kind,
-            v=c.v, cap=c.cap,
+            spec=spec, Tf=T / 3.0, Tb=2.0 * T / 3.0,
             evict_bytes=(MM.eviction_bytes(nb, c.attention, c.v)
-                         if c.kind in S.BPIPE_FAMILY else 0.0),
-            pair_bw=R.NVLINK_BW, pair_hops=max(rp.feas.pair_hops, 1)))
+                         if spec.policy.moves_data else 0.0),
+            pair_bw=R.NVLINK_BW, pair_hops=max(rp.feas.pair_hops, 1),
+            d2h_bw=R.PCIE_BW, h2d_bw=R.PCIE_BW))
         assert rp.makespan == pytest.approx(res.makespan)
         assert best.makespan <= res.makespan + 1e-12, (best.cand, c)
 
@@ -95,10 +95,12 @@ def test_gpt3_verdict_bpipe_wins_under_recompute():
     rec = recommend(ranked, "recompute")
     assert rec is not None
     assert rec.cand.kind in S.BPIPE_FAMILY and rec.cand.b == 2
-    # the win is memory-made: plain 1F1B cannot hold b=2 on an A100-80G
+    # the win is memory-made: UNMANAGED 1F1B cannot hold b=2 on an
+    # A100-80G (residency-managed 1f1b variants can — that is the point)
     oom = [rp for rp in ranked
            if rp.cand.kind == "1f1b" and rp.cand.b == 2
-           and rp.cand.attention == "recompute"]
+           and rp.cand.attention == "recompute"
+           and rp.cand.residency == "none"]
     assert oom and all(rp.verdict == "infeasible" for rp in oom)
     # flash arm: the paper's BPipe row loses — planner must not pick BPipe
     rec_flash = recommend(ranked, "flash")
@@ -135,15 +137,26 @@ def test_rejections_cite_required_gain_in_table_and_summary():
 
 
 def test_planner_cli_end_to_end(capsys):
+    import json as _json
+    from repro.core import plan as P
     from repro.launch import plan as plan_cli
     plan_cli.main(["--config", "gpt3_96b", "--attention", "recompute",
-                   "--top", "3"])
+                   "--top", "3", "--spec-json"])
     out = capsys.readouterr().out
     assert "PLAN gpt3-96b [recompute]: bpipe b=2" in out
     assert "req_gain" in out
+    # --spec-json round-trips the FULL spec, residency included
+    specs = [_json.loads(ln) for ln in out.splitlines()
+             if ln.startswith("{")]
+    assert specs
+    for rec in specs:
+        spec = P.ScheduleSpec.from_dict(rec["spec"])
+        assert set(rec["spec"]) == set(P.ScheduleSpec.DICT_KEYS)
+        assert spec.to_dict() == rec["spec"]
+        assert spec.residency == "bpipe_swap"       # the winning plan's
     plan_cli.main(["--config", "llama_65b", "--csv"])
     out = capsys.readouterr().out
-    assert "verdict=reject" in out
+    assert "verdict=reject" in out and ",res=" in out
 
 
 # ---------------------------------------------------------------------------
