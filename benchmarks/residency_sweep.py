@@ -1,19 +1,31 @@
 """Residency-policy sweep: the paper's three-way contest (§4 / Table 3)
 as one mechanism — makespan and peak device memory across
 {bpipe_swap, host_offload, selective_recompute, none} on the two paper
-configs.
+configs, plus the transfer-overlap depth axis (docs/transfer.md): every
+data-moving arm is swept at depth 1 (serialized classic) and depth 2
+(overlapped), so the table shows directly whether hiding the link
+changes the arm's verdict.
 
 Each arm runs the SAME base schedule and the same cap-driven spill
 discipline; only the residency mechanism differs: swap rides the
-NVLink-class pair link, offload the PCIe-class host link, recompute the
-compute frontier (one extra chunk forward per restore). Peak bytes come
-from the residency-aware memory model (spilled units charged their
-retained bytes; offloaded bytes reported as host_gib).
+NVLink-class pair link, offload the PCIe-class host link (direction
+split D2H/H2D), recompute the compute frontier (one extra chunk forward
+per restore). Peak bytes come from the residency-aware memory model
+(spilled units charged their retained bytes; offloaded bytes reported
+as host_gib; depth > 1 charged its in-flight transients).
 
-Columns: config, attention, b, kind, res, makespan, mfu_rel (vs the
-unmanaged 1f1b arm), peak_gib, host_gib, moves, traffic_gib, stall.
+Row order is pinned: rows are appended to a plain list strictly in the
+declared (case x arm x depth) order — never collected through or
+re-derived from dict iteration — so ``BENCH_smoke.json`` diffs are
+stable across runs and Python builds.
+
+Columns: config, attention, b, kind, res, depth, makespan, mfu_rel (vs
+the unmanaged 1f1b arm), peak_gib, host_gib, moves, traffic_gib, stall,
+queue_peak.
 """
 from __future__ import annotations
+
+from typing import List, Tuple
 
 from repro.core import memory_model as MM
 from repro.core import plan as P
@@ -22,9 +34,16 @@ from repro.core.notation import (GPT3_96B, LLAMA_65B, NVLINK_BW, PCIE_BW,
                                  Notation)
 from repro.planner import cost_model_for
 
-#: (kind, residency) arms — same spill cap, four places for the stash.
-ARMS = [("1f1b", "none"), ("bpipe", "bpipe_swap"),
-        ("1f1b", "host_offload"), ("1f1b", "selective_recompute")]
+#: (kind, residency, depth) arms — same spill cap, four places for the
+#: stash; data-moving mechanisms additionally swept over overlap depth.
+ARMS: Tuple[Tuple[str, str, int], ...] = (
+    ("1f1b", "none", 1),
+    ("bpipe", "bpipe_swap", 1),
+    ("bpipe", "bpipe_swap", 2),
+    ("1f1b", "host_offload", 1),
+    ("1f1b", "host_offload", 2),
+    ("1f1b", "selective_recompute", 1),
+)
 
 CASES = [("gpt3-96b", GPT3_96B, "recompute", 2),
          ("llama-65b", LLAMA_65B, "recompute", 4)]
@@ -34,9 +53,11 @@ SMOKE_CASES = [("smoke", SMOKE_N, "recompute", 2)]
 
 
 def _arm_row(n: Notation, att: str, b: int, kind: str, res: str,
-             cost) -> dict:
+             depth: int, cost) -> dict:
     nb = n.replace(b=b)
-    spec = P.ScheduleSpec(kind, n.p, nb.num_micro, residency=res)
+    spec = P.ScheduleSpec(kind, n.p, nb.num_micro,
+                          residency="none" if res == "bpipe_swap" else res,
+                          depth=depth)
     T = cost.stage_T(nb, att)
     sim = SIM.simulate(SIM.SimConfig(
         spec=spec, Tf=T / 3.0, Tb=2.0 * T / 3.0,
@@ -50,32 +71,40 @@ def _arm_row(n: Notation, att: str, b: int, kind: str, res: str,
         "host_gib": max(m.host_bytes for m in mems) / 2**30,
         "moves": P.num_moves(spec),
         "traffic_gib": MM.traffic_bytes(nb, att, spec) / 2**30,
+        "queue_peak": sim.queue_peak,
     }
 
 
 def main(print_csv=True, smoke=False):
-    rows = []
-    for name, n, att, b in (SMOKE_CASES if smoke else CASES):
-        # the cheap analytic model in smoke; Table 5 curves otherwise
+    cases = SMOKE_CASES if smoke else CASES
+    # Rows accumulate in a plain list strictly in the declared
+    # (case x arm) order, so the emitted order and BENCH_smoke.json
+    # diffs are stable across runs and Python builds. The unmanaged
+    # 1f1b arm is declared first per case and anchors every arm's
+    # relative MFU.
+    rows: List[Tuple[str, str, int, str, str, int, dict]] = []
+    for name, n, att, b in cases:
         if smoke:
-            cost = cost_model_for(None)
+            cost = cost_model_for(None)     # cheap analytic model
         else:
             from repro.configs import get_config
             cost = cost_model_for(get_config(name))
-        base = None
-        for kind, res in ARMS:
-            r = _arm_row(n, att, b, kind, res, cost)
-            if base is None:
-                base = r["makespan"]
-            rel = base / r["makespan"]
-            rows.append((name, att, b, kind, res, r))
+        base_makespan = None
+        for kind, res, depth in ARMS:
+            r = _arm_row(n, att, b, kind, res, depth, cost)
+            if (kind, res) == ("1f1b", "none"):
+                base_makespan = r["makespan"]
+            rel = base_makespan / r["makespan"]
+            rows.append((name, att, b, kind, res, depth, r))
             if print_csv:
                 print(f"residency_sweep,{name},{att},b={b},{kind},res={res},"
+                      f"depth={depth},"
                       f"makespan={r['makespan']:.4g},mfu_rel={rel:.3f},"
                       f"peak_gib={r['peak_gib']:.2f},"
                       f"host_gib={r['host_gib']:.2f},moves={r['moves']},"
                       f"traffic_gib={r['traffic_gib']:.2f},"
-                      f"stall={r['stall']:.3g}")
+                      f"stall={r['stall']:.3g},"
+                      f"queue_peak={r['queue_peak']}")
     return rows
 
 

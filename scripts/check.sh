@@ -7,6 +7,14 @@
 # Needs no network and no PYTHONPATH fiddling (pyproject sets
 # pythonpath=["src"]); hypothesis is optional (tests/conftest.py falls
 # back to the deterministic stub in tests/_hypothesis_stub.py).
+#
+# Env knobs:
+#   REPRO_FUZZ_EXAMPLES       differential-harness simulator examples (200)
+#   REPRO_FUZZ_EXEC_EXAMPLES  differential-harness executor examples (6)
+#   REPRO_TEST_BUDGET_S       per-test duration budget for the grep below
+#                             (default 120 here for slow dev boxes; CI
+#                             pins 30 so a tier-1 test cannot silently
+#                             regress past 30s on a standard runner)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,17 +30,55 @@ if [ "$loops" != "src/repro/core/plan.py" ]; then
     exit 1
 fi
 
+# Differential schedule-fuzz harness, seeded + bounded: random valid
+# ScheduleSpecs must keep the executor bit-identical to unmanaged
+# execution, the simulator above the ideal bound / engine-order
+# invariant, and executor bytes agreeing with the memory model. The
+# hypothesis stub draws from a fixed seed, so a red run reproduces; a
+# failing spec is written to fuzz_failures.json (CI uploads it).
+rm -f fuzz_failures.json
+REPRO_FUZZ_EXAMPLES="${REPRO_FUZZ_EXAMPLES:-200}" \
+REPRO_FUZZ_EXEC_EXAMPLES="${REPRO_FUZZ_EXEC_EXAMPLES:-6}" \
+    python -m pytest -q tests/test_differential.py
+
 # Benchmark suite on tiny CPU-only shapes (includes the planner sweep
 # over the two smallest configs) — schedule/planner regressions fail
 # here, not just in tier-1.
 PYTHONPATH=src python -m benchmarks.run --smoke > /dev/null
 
 # Planner acceptance verdicts (paper Table 3): BPipe must win
-# GPT-3-recompute and lose LLaMA.
-PYTHONPATH=src python -m repro.launch.plan --config gpt3_96b \
-    --attention recompute --top 0 \
-    | grep -q 'PLAN gpt3-96b \[recompute\]: bpipe'
-PYTHONPATH=src python -m repro.launch.plan --config llama_65b --top 0 \
-    | grep -q 'PLAN llama-65b: 1f1b'
+# GPT-3-recompute and lose LLaMA. (Captured first, then grepped:
+# `cli | grep -q` races — grep exits at the first match and SIGPIPEs
+# the still-printing CLI, which pipefail turns into a flaky failure.)
+gpt3_out=$(PYTHONPATH=src python -m repro.launch.plan --config gpt3_96b \
+    --attention recompute --top 0)
+grep -q 'PLAN gpt3-96b \[recompute\]: bpipe' <<< "$gpt3_out"
+llama_out=$(PYTHONPATH=src python -m repro.launch.plan --config llama_65b \
+    --top 0)
+grep -q 'PLAN llama-65b: 1f1b' <<< "$llama_out"
 
-python -m pytest -q "$@"
+# Tier-1 with a per-test wall-clock budget: --durations surfaces the
+# slowest tests and the awk grep fails the run if any single test
+# exceeds the budget — a silent 10x slowdown in one test is a
+# regression even while green. Exemptions: the differential harness
+# already ran (seeded + bounded) above, and slow-MARKED tests are
+# declared slow, not silently slow — they run un-budgeted afterwards.
+# (pytest exit 5 = "no tests collected" — fine in either phase when
+# pass-through args select only slow, or only non-slow, tests)
+budget="${REPRO_TEST_BUDGET_S:-120}"
+durations_log=$(mktemp)
+fast_rc=0
+python -m pytest -q --durations=10 -m "not slow" \
+    --ignore=tests/test_differential.py "$@" \
+    | tee "$durations_log" || fast_rc=$?
+[ "$fast_rc" -eq 0 ] || [ "$fast_rc" -eq 5 ]
+awk -v budget="$budget" '
+    /^[0-9.]+s (call|setup|teardown)/ {
+        if ($1 + 0 > budget) { print "over budget (" budget "s):", $0; bad = 1 }
+    }
+    END { exit bad }
+' "$durations_log"
+rm -f "$durations_log"
+slow_rc=0
+python -m pytest -q -m "slow" "$@" || slow_rc=$?
+[ "$slow_rc" -eq 0 ] || [ "$slow_rc" -eq 5 ]

@@ -100,7 +100,13 @@ def per_stage_memory(n: Notation, attention: str, kind: KindOrSpec,
     spilled off the device store (``Schedule.peak_spilled``) are charged
     the policy's ``retained_bytes`` on the device (the boundary input
     for selective_recompute, nothing for host_offload — whose full unit
-    bytes land in ``host_bytes`` instead)."""
+    bytes land in ``host_bytes`` instead).
+
+    Transfer-overlap depth (``spec.depth``, docs/transfer.md) buys its
+    overlap with memory: a data-moving policy at depth d may hold up to
+    d in-flight restore transients per stage instead of the single one
+    the cap already budgets, so stages that restore over a link are
+    charged ``(d - 1)`` extra units."""
     spec = _as_spec(kind, n, v, cap)
     sch = P.compile_plan(spec)
     peaks = sch.peak_stash
@@ -112,9 +118,11 @@ def per_stage_memory(n: Notation, attention: str, kind: KindOrSpec,
     out = []
     for i in range(n.p):
         spill = spilled.get(i, 0)
+        inflight = ((spec.depth - 1) if pol.moves_data
+                    and sch.num_loads.get(i, 0) > 0 else 0)
         out.append(StageMemory(
             stage=i, peak_stash=peaks[i],
-            act_bytes=peaks[i] * per_mb + spill * retained,
+            act_bytes=(peaks[i] + inflight) * per_mb + spill * retained,
             param_bytes=pb,
             host_bytes=spill * per_mb if pol.mechanism == "host" else 0.0))
     return out

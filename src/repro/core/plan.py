@@ -14,7 +14,10 @@ Megatron-LM's schedule registry:
     spec): per-stage instruction streams with each instruction's resolved
     upstream dependency edge and device hop, the evictor/acceptor partner
     map, per-stage stash bounds, eviction/load counts, and peak-stash
-    accounting. Consumers stop re-deriving any of this per call.
+    accounting. Every residency move is split into ISSUE/WAIT halves —
+    the issue-early/complete-lazy transfer contract (docs/transfer.md)
+    the simulator prices on channels and the executor maps onto real
+    async copies. Consumers stop re-deriving any of this per call.
   * ``run(streams, handlers)`` — the single generic ready-instruction
     dispatch loop (with deadlock detection). The discrete-event simulator,
     the executable runtime, and the stash accounting are all handler sets
@@ -67,6 +70,15 @@ class ScheduleSpec:
             ``"bpipe_swap"``; unbalanced kinds accept ``"none"``,
             ``"host_offload"``, ``"selective_recompute"`` (or any
             registered policy whose mechanism is not the swap).
+      depth: transfer-overlap depth (docs/transfer.md): how many
+            residency moves may be in flight per channel, and how many
+            chunk-level F+B slots ahead of its backward a restore is
+            issued. ``depth=1`` is the classic serialized contract (one
+            in-flight transient, one-slot prefetch — today's behavior,
+            golden-pinned); deeper overlap hides slower links at the
+            cost of ``depth-1`` extra in-flight units of device memory.
+            Normalized to 1 when the residency policy moves no bytes
+            over a channel (``none``, ``selective_recompute``).
 
     Specs are frozen and hashable — they key the compile cache and can be
     used as dict keys / set members anywhere a "schedule variant" is
@@ -78,6 +90,7 @@ class ScheduleSpec:
     v: int = 1
     cap: Optional[int] = None
     residency: str = "none"
+    depth: int = 1
 
     def __post_init__(self):
         entry = sched.SCHEDULES.get(self.kind)
@@ -138,6 +151,14 @@ class ScheduleSpec:
                     object.__setattr__(self, "cap", None)
         else:
             object.__setattr__(self, "cap", None)
+        if self.depth < 1:
+            raise ValueError(f"depth must be >= 1, got {self.depth}")
+        if not (entry.balanced or pol.moves_data):
+            # depth is a *transfer* dimension: when the policy moves no
+            # bytes over a channel (none, selective_recompute) there is
+            # nothing to overlap — normalize so the knob is not a
+            # spurious identity dimension
+            object.__setattr__(self, "depth", 1)
 
     # -- derived identity ------------------------------------------------
     @property
@@ -190,16 +211,20 @@ class ScheduleSpec:
             bits.append(f"res={self.residency}")
         if self.balanced or self.policy.active:
             bits.append(f"cap={self.cap if self.cap is not None else 'def'}")
+        if self.depth != 1:
+            bits.append(f"depth={self.depth}")
         return " ".join(bits)
 
     def to_dict(self) -> Dict[str, Any]:
         return {"kind": self.kind, "p": self.p, "m": self.m,
-                "v": self.v, "cap": self.cap, "residency": self.residency}
+                "v": self.v, "cap": self.cap, "residency": self.residency,
+                "depth": self.depth}
 
     #: Exactly the keys ``to_dict`` emits — ``from_dict`` rejects anything
     #: else so a typo'd or stale spec JSON fails loudly instead of
     #: silently dropping a dimension.
-    DICT_KEYS = frozenset(("kind", "p", "m", "v", "cap", "residency"))
+    DICT_KEYS = frozenset(("kind", "p", "m", "v", "cap", "residency",
+                           "depth"))
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "ScheduleSpec":
@@ -211,19 +236,35 @@ class ScheduleSpec:
         return cls(kind=d["kind"], p=int(d["p"]), m=int(d.get("m", 0)),
                    v=int(d.get("v", 1)),
                    cap=None if d.get("cap") is None else int(d["cap"]),
-                   residency=str(d.get("residency", "none")))
+                   residency=str(d.get("residency", "none")),
+                   depth=int(d.get("depth", 1)))
 
 
 # ---------------------------------------------------------------------------
 # Compiled instructions
 # ---------------------------------------------------------------------------
+#: Phases of a residency move under the issue-early/complete-lazy
+#: contract (docs/transfer.md): the ISSUE half starts the transfer as
+#: soon as its dependency is ready, the WAIT half blocks the dependent
+#: compute until the transfer really completed. Compute ops (F/B) carry
+#: the empty phase.
+ISSUE, WAIT = "issue", "wait"
+
+
 @dataclasses.dataclass(frozen=True)
 class PlannedInstr:
     """One schedule instruction with its dispatch context resolved at
     compile time: the virtual stage it runs on, the upstream completion
     it waits for (``dep``), and whether that dependency crosses a device
     boundary (``dep_hop`` — the p2p transfer the simulator charges and a
-    multi-host runtime would device_put)."""
+    multi-host runtime would device_put).
+
+    Residency moves are compiled into two halves (``phase``): the ISSUE
+    half (dep: what the move waits for — the unit's own F for a
+    release, the release's completion for a restore) and the WAIT half
+    (dep: the move's own completion), placed where the completion is
+    consumed. Both halves share the op name and publish/consume the
+    same canonical ``done_key``."""
     op: str
     stage: int
     mb: int
@@ -231,6 +272,7 @@ class PlannedInstr:
     vs: int                        # virtual stage = chunk * p + stage
     dep: Optional[DepKey] = None   # (op, stage, mb, chunk) upstream
     dep_hop: bool = False
+    phase: str = ""                # "", ISSUE or WAIT
 
     @property
     def key(self) -> Tuple[int, int, int]:
@@ -241,12 +283,17 @@ class PlannedInstr:
         """The completion record this instruction publishes."""
         return (self.op, self.stage, self.mb, self.chunk)
 
+    @property
+    def is_wait(self) -> bool:
+        return self.phase == WAIT
+
     def as_instr(self) -> Instr:
         return Instr(self.op, self.mb, self.chunk)
 
     def __repr__(self):
         c = f".c{self.chunk}" if self.chunk else ""
-        return f"{self.op}{self.mb}{c}@{self.stage}"
+        w = "+w" if self.phase == WAIT else ""
+        return f"{self.op}{self.mb}{c}{w}@{self.stage}"
 
 
 def _plan_stream(spec: ScheduleSpec, stage: int,
@@ -285,6 +332,45 @@ def _plan_stream(spec: ScheduleSpec, stage: int,
     return tuple(out)
 
 
+def _split_stream(stream: Sequence[PlannedInstr]) -> Tuple[PlannedInstr, ...]:
+    """Split every residency move into its ISSUE/WAIT halves.
+
+    Placement is the issue-early/complete-lazy contract:
+      * a release's ISSUE sits where the move sat (right after the
+        covering forward — the earliest its data exists); its WAIT sits
+        immediately before the matching restore's ISSUE, the first point
+        its completion is consumed;
+      * a restore's ISSUE sits where the move sat and its WAIT directly
+        after — i.e. just before the backward that needs the data.
+
+    Positions of compute ops (and of the canonical move events) are
+    unchanged, so the depth-1 engine prices exactly the serialized
+    timeline this refactor replaced (golden-pinned), and the stash/spill
+    accounting runs on the unsplit stream and stays bit-identical.
+    """
+    out: List[PlannedInstr] = []
+    pending: Dict[Tuple[str, int, int], PlannedInstr] = {}
+    for ins in stream:
+        if ins.op in respol.RELEASE_OPS:
+            out.append(dataclasses.replace(ins, phase=ISSUE))
+            pending[(ins.op, ins.mb, ins.chunk)] = dataclasses.replace(
+                ins, phase=WAIT, dep=ins.done_key, dep_hop=False)
+        elif ins.op in respol.RESTORE_OPS:
+            rel = respol.RESTORE_OPS[ins.op].release_op
+            rel_wait = pending.pop((rel, ins.mb, ins.chunk), None)
+            if rel_wait is not None:
+                out.append(rel_wait)
+            out.append(dataclasses.replace(ins, phase=ISSUE))
+            out.append(dataclasses.replace(ins, phase=WAIT,
+                                           dep=ins.done_key, dep_hop=False))
+        else:
+            out.append(ins)
+    # a release with no restore cannot occur in a well-formed stream, but
+    # tolerate it (its wait becomes a trailing barrier) rather than drop
+    out.extend(pending.values())
+    return tuple(out)
+
+
 # ---------------------------------------------------------------------------
 # The compiled artifact
 # ---------------------------------------------------------------------------
@@ -292,7 +378,9 @@ def _plan_stream(spec: ScheduleSpec, stage: int,
 class Schedule:
     """Everything a schedule consumer needs, computed once per spec.
 
-    ``streams`` carry resolved deps/hops; ``partner`` is the BPipe
+    ``streams`` carry resolved deps/hops, with every residency move
+    split into its ISSUE/WAIT halves (``PlannedInstr.phase`` — the
+    transfer-engine IR, docs/transfer.md); ``partner`` is the BPipe
     evictor<->acceptor map (empty for unbalanced kinds); ``cap`` is the
     resolved uniform bound (None = unbounded); ``bounds`` the per-stage
     live-store assertion bound the executor enforces (the schedule's own
@@ -337,8 +425,10 @@ class Schedule:
 
     def instr_streams(self) -> Dict[int, List[Instr]]:
         """The raw-``Instr`` view (the pre-compile IR, for legacy callers
-        and stream-shape tests)."""
-        return {i: [pi.as_instr() for pi in s]
+        and stream-shape tests): WAIT halves collapse away and each move
+        appears once, at its ISSUE position — exactly the pre-split
+        stream shape (golden-pinned)."""
+        return {i: [pi.as_instr() for pi in s if not pi.is_wait]
                 for i, s in self.streams.items()}
 
 
@@ -370,14 +460,19 @@ def compile_plan(spec: ScheduleSpec) -> Schedule:
             return base
         return pol.rewrite(base, cap)
 
-    streams = {i: _plan_stream(spec, i, raw(i)) for i in range(p)}
+    unsplit = {i: _plan_stream(spec, i, raw(i)) for i in range(p)}
     partner = partner_map(p) if spec.balanced else {}
-    traces, spill_traces, counts = _account(streams, p, partner)
+    # Stash/spill accounting runs on the UNSPLIT streams: the split only
+    # makes completion explicit, it does not move any residency event,
+    # and accounting on the pre-split order keeps the round-robin merge
+    # (and with it every golden-pinned peak) bit-identical.
+    traces, spill_traces, counts = _account(unsplit, p, partner)
+    streams = {i: _split_stream(unsplit[i]) for i in range(p)}
     peaks = {i: (max(t) if t else 0) for i, t in traces.items()}
     spilled = {i: (max(t) if t else 0) for i, t in spill_traces.items()}
-    releases = {i: sum(1 for x in streams[i] if x.op in respol.RELEASE_OPS)
+    releases = {i: sum(1 for x in unsplit[i] if x.op in respol.RELEASE_OPS)
                 for i in range(p)}
-    restores = {i: sum(1 for x in streams[i] if x.op in respol.RESTORE_OPS)
+    restores = {i: sum(1 for x in unsplit[i] if x.op in respol.RESTORE_OPS)
                 for i in range(p)}
     if cap is None:
         bounds: Dict[int, Optional[int]] = {i: None for i in range(p)}
@@ -477,8 +572,9 @@ def _account(streams: Mapping[int, Sequence[Any]], p: int,
     of units spilled OFF the device store by a non-swap policy
     (host-resident / residual-freed), and the final device counts (all
     zero for a well-formed schedule). Works on raw ``Instr`` and
-    compiled ``PlannedInstr`` streams alike — the handlers only read
-    ``op``.
+    compiled ``PlannedInstr`` streams alike — the handlers read ``op``
+    plus (when present) the ISSUE/WAIT ``phase``: a move counts once, at
+    its ISSUE half; WAIT halves are completion barriers, not events.
     """
     partner = partner_map(p) if partner is None else partner
     counts = {i: 0 for i in range(p)}
@@ -497,6 +593,8 @@ def _account(streams: Mapping[int, Sequence[Any]], p: int,
         bump(i, -1)
 
     def on_release(i, ins):
+        if getattr(ins, "phase", "") == WAIT:
+            return None
         counts[i] -= 1
         if respol.RELEASE_OPS[ins.op].swap:
             counts[partner[i]] += 1
@@ -507,6 +605,8 @@ def _account(streams: Mapping[int, Sequence[Any]], p: int,
         traces[i].append(counts[i])
 
     def on_restore(i, ins):
+        if getattr(ins, "phase", "") == WAIT:
+            return None
         counts[i] += 1
         if respol.RESTORE_OPS[ins.op].swap:
             counts[partner[i]] -= 1

@@ -13,20 +13,25 @@ Model:
   * p2p boundary transfer between adjacent *virtual* stages: t_p2p
     (charged on every compiled dependency edge whose ``dep_hop`` is set —
     including the device p-1 -> device 0 wraparound between chunks),
-  * EVICT/LOAD: async copies on the evictor<->acceptor link
-    (bytes / pair_bw * hops); serialized per link; LOAD(mb, chunk) must
-    finish before B(mb, chunk) starts. LOAD prefetch is issued one
-    *chunk-level* F+B slot ((Tf+Tb)/v) ahead of the backward it feeds,
-    so interleaved BPipe load-stall is charged at chunk granularity, not
-    a whole-device slot (pinned by tests/test_plan.py),
-  * residency ops (``repro.memory``): OFFLOAD/FETCH are async copies on
-    the per-device host link (bytes / d2h_bw resp. h2d_bw, serialized
-    per direction; FETCH prefetched like LOAD and stalling B the same
-    way), DROP is free bookkeeping, and RECOMPUTE occupies the stage's
-    compute frontier for one chunk-level forward (Tf/v) — the FLOPs bill
-    of recomputation. Pricing handlers are derived from the policy
-    registry's mechanism field, so a newly registered policy's ops are
-    priced without edits here.
+  * residency moves (EVICT/LOAD, OFFLOAD/FETCH, plugin policies): priced
+    by the transfer engine (``repro.transfer``) on explicit per-device
+    channels — the shared evictor<->acceptor pair link for the swap
+    (bytes / pair_bw * hops), the direction-split D2H/H2D host link for
+    offload (bytes / d2h_bw resp. h2d_bw). Each channel is a serialized
+    FIFO, so overlap (or the lack of it) falls out of channel-queue
+    occupancy rather than per-op special cases. A move's compiled ISSUE
+    half starts the transfer as soon as its dependency is ready — a
+    restore is issued up to ``spec.depth`` chunk-level F+B slots ahead
+    of the backward it feeds (depth 1 = the classic one-slot prefetch,
+    whose ``(Tf+Tb)/(2v)`` stall threshold is golden-pinned in
+    tests/test_plan.py) — and the backward stalls only if the transfer
+    is still in flight when it starts,
+  * recompute-mechanism policies have no channel: DROP is free
+    bookkeeping, and RECOMPUTE occupies the stage's compute frontier for
+    one chunk-level forward (Tf/v) — the FLOPs bill of recomputation.
+
+Pricing handlers are derived from the policy registry's mechanism field,
+so a newly registered policy's ops are priced without edits here.
 
 The schedule itself — streams, dependency edges, device hops, partner
 map — comes precompiled from ``plan.compile_plan``; this module only
@@ -41,6 +46,8 @@ from typing import Dict, List, Optional
 from repro.core import plan as P
 from repro.core.schedule import B, F
 from repro.memory import policy as respol
+from repro.transfer import TransferEngine
+from repro.transfer.channel import ChannelStats
 
 
 @dataclasses.dataclass
@@ -66,6 +73,7 @@ class SimConfig:
     v: int = 2                  # chunks per device (interleaved kinds only)
     cap: Optional[int] = None   # stash-cap override (balanced / residency)
     residency: str = "none"     # residency policy (plain kinds)
+    depth: int = 1              # transfer-overlap depth (docs/transfer.md)
     spec: Optional[P.ScheduleSpec] = None
 
     def __post_init__(self):
@@ -73,6 +81,7 @@ class SimConfig:
             self.p, self.m = self.spec.p, self.spec.m
             self.kind, self.cap = self.spec.kind, self.spec.cap
             self.residency = self.spec.residency
+            self.depth = self.spec.depth
             if self.spec.interleaved:
                 self.v = self.spec.v
 
@@ -84,7 +93,8 @@ class SimConfig:
         # residency-less spec first would null a cap override (no active
         # policy -> no cap) before the replace could re-activate it
         return P.ScheduleSpec(self.kind, self.p, self.m, v=self.v,
-                              cap=self.cap, residency=self.residency)
+                              cap=self.cap, residency=self.residency,
+                              depth=self.depth)
 
 
 @dataclasses.dataclass
@@ -97,14 +107,23 @@ class SimResult:
                                 # for swap/host moves, re-forward time for
                                 # recompute) — the overhead exposure that
                                 # breaks equal-makespan ties in the planner
+    channels: Dict[tuple, ChannelStats] = dataclasses.field(
+        default_factory=dict)   # per-channel occupancy (transfer engine)
 
     @property
     def bubble_fraction(self) -> float:
         total = self.makespan * len(self.busy)
         return 1.0 - sum(self.busy) / total
 
+    @property
+    def queue_peak(self) -> int:
+        """Max in-flight transfers reached on any channel (0 when the
+        schedule moves nothing) — bounded by ``spec.depth``."""
+        return max((s.queue_peak for s in self.channels.values()),
+                   default=0)
 
-def _simulate(cfg: SimConfig) -> SimResult:
+
+def _simulate(cfg: SimConfig, greedy: bool = True) -> SimResult:
     spec = cfg.to_spec()
     schedule = P.compile_plan(spec)
     p, v = spec.p, spec.v
@@ -115,11 +134,15 @@ def _simulate(cfg: SimConfig) -> SimResult:
         if cfg.evict_bytes else 0.0
     t_d2h = cfg.evict_bytes / cfg.d2h_bw if cfg.evict_bytes else 0.0
     t_h2d = cfg.evict_bytes / cfg.h2d_bw if cfg.evict_bytes else 0.0
-    partner = schedule.partner
+    engine = TransferEngine(schedule, t_peer=t_move, t_d2h=t_d2h,
+                            t_h2d=t_h2d, depth=spec.depth)
+    # Restores are issued up to ``depth`` chunk-level F+B slots ahead of
+    # the backward they feed (issue-early): deeper overlap starts the
+    # transfer earlier and rides the channel queue instead of the stage.
+    window = spec.depth * (tf + tb)
 
     t_stage = {i: 0.0 for i in range(p)}    # stage compute frontier
     done: Dict[P.DepKey, float] = {}        # (op, stage, mb, chunk) -> end
-    link_free: Dict[tuple, float] = {}      # pair link serialization
     busy = {i: 0.0 for i in range(p)}
     state = {"stall": 0.0, "last_b": 0.0, "move": 0.0}
     timeline: Dict[int, List] = {i: [] for i in range(p)}
@@ -160,93 +183,78 @@ def _simulate(cfg: SimConfig) -> SimResult:
         t_stage[i] = end_t
         finish(i, ins, start_t, end_t)
 
-    def on_evict(i, ins):
-        # async: starts when F(mb, chunk) finished and the link frees
-        pair = (min(i, partner[i]), max(i, partner[i]))
-        start_t = max(done[ins.dep], link_free.get(pair, 0.0))
-        end_t = start_t + t_move
+    def on_release(i, ins):
+        # ISSUE: the copy starts when the unit's F finished and the
+        # channel admits it; async — the stage frontier is untouched.
+        # WAIT halves are free here: completion is already priced, and
+        # the restore's dep edge consumes it.
+        if ins.is_wait:
+            return None
+        pol = respol.RELEASE_OPS[ins.op]
+        ready = done[ins.dep]
+        if pol.mechanism == "recompute":
+            # freeing residuals is bookkeeping — no time, no link
+            done[ins.done_key] = ready
+            finish(i, ins, ready, ready)
+            return None
+        start_t, end_t = engine.issue(pol, i, ready, release=True)
         done[ins.done_key] = end_t
-        state["move"] += t_move
-        link_free[pair] = end_t
+        state["move"] += end_t - start_t
         finish(i, ins, start_t, end_t)
+        return None
 
-    def on_load(i, ins):
-        # async prefetch, issued one chunk-level F+B slot ahead of the
-        # backward it feeds (overlaps that compute window)
-        pair = (min(i, partner[i]), max(i, partner[i]))
-        issue = max(0.0, t_stage[i] - tf - tb)
-        start_t = max(issue, done[ins.dep], link_free.get(pair, 0.0))
-        end_t = start_t + t_move
+    def on_restore(i, ins):
+        # ISSUE: prefetched into the depth-sized window ahead of the
+        # backward; the WAIT half is the completion barrier the backward
+        # observes (charged there, as load-stall).
+        if ins.is_wait:
+            return None
+        pol = respol.RESTORE_OPS[ins.op]
+        if pol.mechanism == "recompute":
+            # re-run the chunk's forward ON the compute frontier: the
+            # FLOPs bill of recomputation the paper's recompute arms pay
+            start_t = max(t_stage[i], done[ins.dep])
+            end_t = start_t + tf
+            done[ins.done_key] = end_t
+            state["move"] += tf
+            busy[i] += tf
+            t_stage[i] = end_t
+            finish(i, ins, start_t, end_t)
+            return None
+        issue_t = max(0.0, t_stage[i] - window)
+        ready = max(issue_t, done[ins.dep])
+        start_t, end_t = engine.issue(pol, i, ready, release=False)
         done[ins.done_key] = end_t
-        state["move"] += t_move
-        link_free[pair] = end_t
+        state["move"] += end_t - start_t
         finish(i, ins, start_t, end_t)
+        return None
 
-    def on_offload(i, ins):
-        # async D2H copy on the device's host link, serialized per
-        # direction; starts when F(mb, chunk) finished
-        key = ("d2h", i)
-        start_t = max(done[ins.dep], link_free.get(key, 0.0))
-        end_t = start_t + t_d2h
-        done[ins.done_key] = end_t
-        state["move"] += t_d2h
-        link_free[key] = end_t
-        finish(i, ins, start_t, end_t)
-
-    def on_fetch(i, ins):
-        # async H2D prefetch, same chunk-level issue window as LOAD
-        key = ("h2d", i)
-        issue = max(0.0, t_stage[i] - tf - tb)
-        start_t = max(issue, done[ins.dep], link_free.get(key, 0.0))
-        end_t = start_t + t_h2d
-        done[ins.done_key] = end_t
-        state["move"] += t_h2d
-        link_free[key] = end_t
-        finish(i, ins, start_t, end_t)
-
-    def on_drop(i, ins):
-        # freeing residuals is bookkeeping — no time, no link
-        t = done[ins.dep]
-        done[ins.done_key] = t
-        finish(i, ins, t, t)
-
-    def on_recompute(i, ins):
-        # re-run the chunk's forward ON the compute frontier: the FLOPs
-        # bill of recomputation the paper's recompute arms pay
-        start_t = max(t_stage[i], done[ins.dep])
-        end_t = start_t + tf
-        done[ins.done_key] = end_t
-        state["move"] += tf
-        busy[i] += tf
-        t_stage[i] = end_t
-        finish(i, ins, start_t, end_t)
-
-    # Pricing handlers by registered policy mechanism: swap ops ride the
-    # pair link, host ops the per-device host link, recompute ops the
-    # compute frontier. A policy registered by a plugin is priced here
-    # with no simulator edits.
+    # Pricing handlers by registered policy mechanism (via the transfer
+    # engine): swap ops ride the pair link, host ops the per-device
+    # direction-split host link, recompute ops the compute frontier. A
+    # policy registered by a plugin is priced here with no simulator
+    # edits.
     handlers = {F: on_f, B: on_b}
-    _mech_release = {"swap": on_evict, "host": on_offload,
-                     "recompute": on_drop}
-    _mech_restore = {"swap": on_load, "host": on_fetch,
-                     "recompute": on_recompute}
-    for op, pol in respol.RELEASE_OPS.items():
-        handlers[op] = _mech_release[pol.mechanism]
-    for op, pol in respol.RESTORE_OPS.items():
-        handlers[op] = _mech_restore[pol.mechanism]
+    for op in respol.RELEASE_OPS:
+        handlers[op] = on_release
+    for op in respol.RESTORE_OPS:
+        handlers[op] = on_restore
     _stall_ops = tuple(op for op, pol in respol.RESTORE_OPS.items()
                        if pol.moves_data)
 
-    P.run(schedule.streams, handlers)
+    P.run(schedule.streams, handlers, greedy=greedy)
     makespan = max(max(t_stage.values()), state["last_b"])
     return SimResult(makespan=makespan,
                      busy=[busy[i] for i in range(p)],
                      load_stall=state["stall"], timeline=timeline,
-                     move_time=state["move"])
+                     move_time=state["move"], channels=engine.stats())
 
 
 # Public entry point. The dispatch loop itself lives in ``plan.run`` —
-# this module contributes only the pricing handlers above.
+# this module contributes only the pricing handlers above. ``greedy``
+# selects the engine order (True = dataflow drain, False = round-robin);
+# for every channel with a single issuing stage the priced timeline is
+# identical either way (the differential fuzz harness pins this).
 simulate = _simulate
 
 

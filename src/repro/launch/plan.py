@@ -65,6 +65,10 @@ def main(argv=None):
     ap.add_argument("--chip", default="a100", choices=sorted(CHIPS))
     ap.add_argument("--v", type=int, nargs="*", default=[2, 4],
                     help="interleaved chunks-per-device to search")
+    ap.add_argument("--depth", type=int, nargs="*", default=[1, 2],
+                    help="transfer-overlap depths to search for "
+                         "residency-managed plans (in-flight moves per "
+                         "channel; depth 1 = serialized classic)")
     ap.add_argument("--overhead", type=float, default=0.0,
                     help="fractional BPipe overhead inflating break-even")
     ap.add_argument("--top", type=int, default=16,
@@ -103,7 +107,8 @@ def main(argv=None):
                 raise SystemExit(f"unknown --residency {name!r}; known: "
                                  f"{valid}")
         kw["residencies"] = tuple(args.residency)
-    search = SearchSpace(attentions=attentions, vs=tuple(args.v), **kw)
+    search = SearchSpace(attentions=attentions, vs=tuple(args.v),
+                         depths=tuple(args.depth), **kw)
 
     if args.trace:
         events = calibrate.load_chrome_trace(args.trace)

@@ -43,6 +43,10 @@ class StoreStats:
     drops: int = 0
     recomputes: int = 0
     host_peak_bytes: Dict[int, float] = dataclasses.field(default_factory=dict)
+    transfers_inflight_peak: int = 0   # max in-flight moves on one channel
+    #                                    (executor transfer runtime; at most
+    #                                    ScheduleSpec.depth — the slot is
+    #                                    reserved before the copy starts)
 
 
 class ActivationStore:
@@ -101,7 +105,9 @@ class ActivationStore:
         return stash
 
     # -- bpipe_swap: partner store ----------------------------------------
-    def evict(self, i: int, mb: int, partner: int, chunk: int = 0) -> None:
+    def evict(self, i: int, mb: int, partner: int, chunk: int = 0) -> Any:
+        """Ship (mb, chunk) to the paired acceptor; returns the moved
+        stash (the in-flight payload the transfer runtime tracks)."""
         stash = self.local[i].pop((mb, chunk))
         self.foreign[partner][(i, mb, chunk)] = stash
         w = self._w(i, chunk)
@@ -110,8 +116,9 @@ class ActivationStore:
         self._add_bytes(i, -w)
         self._add_bytes(partner, w)
         self._bump(partner)
+        return stash
 
-    def load(self, i: int, mb: int, partner: int, chunk: int = 0) -> None:
+    def load(self, i: int, mb: int, partner: int, chunk: int = 0) -> Any:
         stash = self.foreign[partner].pop((i, mb, chunk))
         self.local[i][(mb, chunk)] = stash
         w = self._w(i, chunk)
@@ -120,6 +127,7 @@ class ActivationStore:
         self._add_bytes(partner, -w)
         self._add_bytes(i, w)
         self._bump(i)
+        return stash
 
     # -- host_offload: D2H / H2D ------------------------------------------
     def offload(self, i: int, mb: int, chunk: int = 0,

@@ -16,7 +16,13 @@ the stash other places to live: OFFLOAD/FETCH really ``jax.device_put``
 the vjp closure (a ``tree_util.Partial`` pytree) to the host platform
 and back; DROP frees the residuals keeping only the boundary input, and
 RECOMPUTE re-runs the stage forward from it — both bit-identical to the
-resident execution, which ``tests/test_residency.py`` pins.
+resident execution, which ``tests/test_residency.py`` pins. Every move
+executes as its compiled ISSUE/WAIT halves (docs/transfer.md): the
+ISSUE starts the async copy and registers it with the bounded-depth
+transfer runtime (``repro.transfer.runtime``), the WAIT blocks on the
+channel before the dependent compute touches the data — so the live
+HBM bound holds on real in-flight buffers, not just on the store's
+bookkeeping.
 
 Interleaved kinds give each device v model chunks: chunk c on device s is
 virtual stage ``c*p + s``; activations flow virtual stage vs -> vs+1 (the
@@ -56,6 +62,8 @@ from repro.memory import policy as respol
 # legacy importers of the executor module.
 from repro.memory.store import ActivationStore, StoreStats, Unit
 from repro.pipeline import stage as stage_mod
+from repro.transfer.channel import channel_key
+from repro.transfer.runtime import AsyncTransferRuntime
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,9 +75,9 @@ class TraceEvent:
     store-move overhead. ``planner.calibrate`` fits simulator costs from
     these and exports them in Chrome trace format."""
     stage: int
-    op: str
-    mb: int
-    chunk: int
+    op: str                      # WAIT halves trace as "<OP>+w" so the
+    mb: int                      # per-op medians calibrate fits stay on
+    chunk: int                   # the canonical move events
     start: float
     end: float
 
@@ -186,6 +194,19 @@ class PipelineExecutor:
         schedule = self._schedule_for(m)
         bounds = schedule.bounds
         partner = schedule.partner
+        # In-flight transfer tracking with the spec's overlap-depth cap:
+        # real copies (device_put and store moves) are async, so the
+        # runtime is what makes the live HBM bound hold — at most
+        # ``depth`` moves may be outstanding per channel before the
+        # oldest is retired (blocked on). Same channel vocabulary the
+        # simulator prices (docs/transfer.md).
+        xfers = AsyncTransferRuntime(self.spec.depth)
+
+        def chan(op: str, i: int) -> Optional[tuple]:
+            pol = respol.RELEASE_OPS.get(op) or respol.RESTORE_OPS[op]
+            return channel_key(pol.mechanism, i, partner.get(i),
+                               release=op in respol.RELEASE_OPS)
+
         events: Optional[List[TraceEvent]] = [] if trace else None
         t_step0 = time.perf_counter()
 
@@ -218,8 +239,10 @@ class PipelineExecutor:
                 if trace:
                     if sync is not None:
                         jax.block_until_ready(sync)
+                    op = ins.op + "+w" if getattr(ins, "is_wait", False) \
+                        else ins.op
                     events.append(TraceEvent(
-                        i, ins.op, ins.mb, ins.chunk,
+                        i, op, ins.mb, ins.chunk,
                         t0 - t_step0, time.perf_counter() - t_step0))
                 if self.enforce_cap and self.cap is not None:
                     # swap ops (EVICT/LOAD) also touch the partner's
@@ -269,28 +292,54 @@ class PipelineExecutor:
                 grad_in[(vs - 1, ins.mb)] = d_carry
             return (d_sp, d_carry)
 
+        # Every move handler follows the compiled ISSUE/WAIT contract:
+        # the ISSUE half starts the (async) copy and registers it with
+        # the transfer runtime; the WAIT half blocks on the channel up to
+        # that unit, so the dependent compute touches the data only once
+        # the copy is really complete — and the depth cap is enforced at
+        # submit time.
         def on_evict(i, ins):
-            store.evict(i, ins.mb, partner[i], ins.chunk)
+            if ins.is_wait:
+                return xfers.wait(chan(ins.op, i), ins.done_key)
+            return xfers.submit(
+                chan(ins.op, i), ins.done_key,
+                lambda: store.evict(i, ins.mb, partner[i], ins.chunk))
 
         def on_load(i, ins):
-            store.load(i, ins.mb, partner[i], ins.chunk)
+            if ins.is_wait:
+                return xfers.wait(chan(ins.op, i), ins.done_key)
+            return xfers.submit(
+                chan(ins.op, i), ins.done_key,
+                lambda: store.load(i, ins.mb, partner[i], ins.chunk))
 
         def on_offload(i, ins):
+            if ins.is_wait:
+                return xfers.wait(chan(ins.op, i), ins.done_key)
             # real D2H: the vjp closure is a tree_util.Partial pytree, so
             # device_put moves the residual arrays to the host platform
-            return store.offload(i, ins.mb, ins.chunk,
-                                 mover=mem_offload.to_host)
+            return xfers.submit(
+                chan(ins.op, i), ins.done_key,
+                lambda: store.offload(i, ins.mb, ins.chunk,
+                                      mover=mem_offload.to_host))
 
         def on_fetch(i, ins):
-            return store.fetch(i, ins.mb, ins.chunk,
-                               mover=mem_offload.to_device)
+            if ins.is_wait:
+                return xfers.wait(chan(ins.op, i), ins.done_key)
+            return xfers.submit(
+                chan(ins.op, i), ins.done_key,
+                lambda: store.fetch(i, ins.mb, ins.chunk,
+                                    mover=mem_offload.to_device))
 
         def on_drop(i, ins):
+            if ins.is_wait:
+                return None
             # free the residuals (the vjp closure reference), keep the
             # boundary input the re-forward starts from
             store.drop(i, ins.mb, ins.chunk, strip=lambda e: e[1])
 
         def on_recompute(i, ins):
+            if ins.is_wait:
+                return None
             vs = ins.vs
             carry = store.dropped_input(i, ins.mb, ins.chunk)
             out, vjp_fn = jax.vjp(
@@ -311,8 +360,11 @@ class PipelineExecutor:
         for op, pol in respol.RESTORE_OPS.items():
             handlers[op] = wrap(mech_restore[pol.mechanism])
         P.run(schedule.streams, handlers)
+        xfers.drain()                       # no copy escapes the step
 
         loss = sum(losses.values()) * scale
         full_grads = self.splitter.merge(grads)
-        return StepResult(loss=loss, grads=full_grads, stats=store.stats(),
+        stats = store.stats()
+        stats.transfers_inflight_peak = xfers.inflight_peak
+        return StepResult(loss=loss, grads=full_grads, stats=stats,
                           events=events)

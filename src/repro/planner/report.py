@@ -13,7 +13,7 @@ from repro.core import schedule as sched
 from repro.core.notation import Notation
 from repro.planner.rank import RankedPlan, arms_of, recommend
 
-_COLS = ("#", "kind", "res", "v", "b", "m", "cap", "attn", "peak_GiB",
+_COLS = ("#", "kind", "res", "v", "b", "m", "cap", "d", "attn", "peak_GiB",
          "makespan_s", "MFU%", "eq3%", "req_gain", "got_gain", "moves",
          "verdict")
 
@@ -46,6 +46,10 @@ def _cell(p: RankedPlan, col: str, idx: int) -> str:
         if not _managed(c):
             return "-"
         return str(c.cap) if c.cap is not None else "def"
+    if col == "d":
+        # transfer-overlap depth (docs/transfer.md); only meaningful for
+        # plans whose residency moves bytes over a channel
+        return str(c.depth) if _managed(c) else "-"
     if col == "attn":
         return c.attention
     if col == "peak_GiB":
@@ -89,6 +93,7 @@ def csv_rows(ranked: List[RankedPlan], tag: str, config: str) -> List[str]:
             f"{tag},{config},rank={i + 1},kind={c.kind},"
             f"res={c.residency},v={c.v},b={c.b},"
             f"m={c.m},cap={c.cap if c.cap is not None else 'def'},"
+            f"depth={c.depth},"
             f"attn={c.attention},peak_gib={p.feas.peak_gib:.2f},"
             f"mfu={100 * p.mfu:.2f},req_gain={p.required_gain:.3f},"
             f"got_gain={p.achieved_gain:.3f},moves={p.moves},"
@@ -113,6 +118,8 @@ def recommendation_line(config: str, ranked: List[RankedPlan],
         bits.append(f"res={c.residency}")
     if _managed(c):
         bits.append(f"cap={c.cap if c.cap is not None else 'default'}")
+    if c.depth != 1:
+        bits.append(f"depth={c.depth}")
     if attention is None:
         bits.append(c.attention)
     why = f"est {100 * best.mfu:.1f}% MFU"

@@ -38,7 +38,11 @@ class Candidate:
     bound (``schedule_cap`` / the policy's ``default_cap``); a
     planner-chosen override otherwise. ``v`` is 1 for plain kinds.
     ``residency`` is the activation-residency policy (balanced kinds
-    carry their built-in ``bpipe_swap``).
+    carry their built-in ``bpipe_swap``). ``depth`` is the
+    transfer-overlap depth (docs/transfer.md): how many residency moves
+    may be in flight per channel — deeper overlap hides slower links at
+    the cost of (depth - 1) extra in-flight units of device memory,
+    which the feasibility pass charges.
     """
     kind: str
     b: int
@@ -47,11 +51,12 @@ class Candidate:
     cap: Optional[int] = None
     attention: str = "recompute"
     residency: str = "none"
+    depth: int = 1
 
     def spec(self, p: int) -> P.ScheduleSpec:
         """The candidate's schedule variant on a p-stage pipeline."""
         return P.ScheduleSpec(self.kind, p, self.m, v=self.v, cap=self.cap,
-                              residency=self.residency)
+                              residency=self.residency, depth=self.depth)
 
     def label(self) -> str:
         bits = [self.kind, f"b={self.b}", f"m={self.m}"]
@@ -61,6 +66,8 @@ class Candidate:
             bits.append(f"res={self.residency}")
         if self.cap is not None:
             bits.append(f"cap={self.cap}")
+        if self.depth != 1:
+            bits.append(f"d={self.depth}")
         bits.append(self.attention)
         return " ".join(bits)
 
@@ -83,6 +90,10 @@ class SearchSpace:
     # the table.
     residencies: Tuple[str, ...] = ("none", "host_offload",
                                     "selective_recompute")
+    # Transfer-overlap depths searched for residency-managed plans
+    # (depth 1 = the serialized classic, listed first so ties between
+    # equal-makespan depths resolve to the cheapest memory profile).
+    depths: Tuple[int, ...] = (1, 2)
 
 
 def micro_batch_sizes(B: int, max_b: int = 0) -> List[int]:
@@ -148,12 +159,16 @@ def enumerate_candidates(n: Notation, space: SearchSpace = SearchSpace(),
                         continue
                     if entry.balanced:
                         # balanced kinds ARE the swap policy; the cap
-                        # ladder is theirs
+                        # ladder is theirs, and each cap opens the
+                        # overlap-depth ladder
                         for cap in _caps_for(kind, p, v, space.cap_deltas,
                                              m):
-                            yield Candidate(kind=kind, b=b, m=m, v=v,
-                                            cap=cap, attention=attention,
-                                            residency="bpipe_swap")
+                            for depth in space.depths:
+                                yield Candidate(kind=kind, b=b, m=m, v=v,
+                                                cap=cap,
+                                                attention=attention,
+                                                residency="bpipe_swap",
+                                                depth=depth)
                         continue
                     for residency in space.residencies:
                         pol = respol.POLICIES.get(residency)
@@ -161,7 +176,12 @@ def enumerate_candidates(n: Notation, space: SearchSpace = SearchSpace(),
                         caps = (_residency_caps(pol, p, v, space.cap_deltas,
                                                 m)
                                 if pol.active else [None])
+                        # depth only matters when bytes move on a channel
+                        depths = space.depths if pol.moves_data else (1,)
                         for cap in caps:
-                            yield Candidate(kind=kind, b=b, m=m, v=v,
-                                            cap=cap, attention=attention,
-                                            residency=residency)
+                            for depth in depths:
+                                yield Candidate(kind=kind, b=b, m=m, v=v,
+                                                cap=cap,
+                                                attention=attention,
+                                                residency=residency,
+                                                depth=depth)

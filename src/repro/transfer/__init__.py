@@ -1,0 +1,31 @@
+"""``repro.transfer``: the per-device transfer engine for activation
+residency moves.
+
+Residency moves (EVICT/LOAD, OFFLOAD/FETCH, plugin policies) ride
+explicit *channels* — the BPipe pair link, the D2H and H2D halves of the
+host link — with an issue-early/complete-lazy contract: a move's ISSUE
+half starts the copy as soon as its dependency is ready, its WAIT half
+blocks the dependent compute only when the data is actually needed, and
+each channel admits a bounded number of in-flight transfers
+(``ScheduleSpec.depth``). Overlap falls out of channel-queue occupancy
+instead of hand-rolled per-op special cases (docs/transfer.md).
+
+Layers:
+  * ``channel``  — channel keys + the serialized FIFO pricing model
+    (pure Python; no jax). Shared vocabulary between the simulator and
+    the executor.
+  * ``engine``   — ``TransferEngine``: the simulator-facing channel set
+    for one compiled ``plan.Schedule``; prices every registered
+    residency policy's moves by mechanism.
+  * ``runtime``  — ``AsyncTransferRuntime``: the executor-facing side;
+    tracks real async ``jax.device_put`` copies per channel and enforces
+    the in-flight depth cap so live HBM bounds stay enforced. Imported
+    lazily by the executor (keeps this package jax-free for the
+    simulator).
+"""
+from repro.transfer.channel import (D2H, H2D, PEER, Channel, ChannelStats,
+                                    channel_key)
+from repro.transfer.engine import TransferEngine
+
+__all__ = ["Channel", "ChannelStats", "TransferEngine", "channel_key",
+           "PEER", "D2H", "H2D"]

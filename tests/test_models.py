@@ -63,6 +63,7 @@ def test_softcap_changes_scores_bounded():
     np.testing.assert_allclose(np.asarray(softcap(x, 0.0)), np.asarray(x))
 
 
+@pytest.mark.slow
 def test_ring_buffer_cache_consistency():
     """Local-attn ring cache: decode matches full forward past the wrap."""
     cfg = _fp32(get_config("recurrentgemma-2b").reduced())

@@ -118,7 +118,8 @@ def test_llama_verdict_bpipe_rejected_at_break_even():
     # stage gain 57.6/54.5
     rej = [rp for rp in ranked
            if rp.cand.kind == "bpipe" and rp.cand.b == 4
-           and rp.cand.attention == "recompute" and rp.cand.cap is None]
+           and rp.cand.attention == "recompute" and rp.cand.cap is None
+           and rp.cand.depth == 1]
     assert len(rej) == 1 and rej[0].verdict == "reject"
     assert rej[0].required_gain == pytest.approx(156.0 / 142.0)
     assert rej[0].achieved_gain == pytest.approx(57.6 / 54.5, rel=1e-3)
@@ -283,7 +284,7 @@ def test_interleaved_break_even_uses_interleaved_bubble():
     il = [rp for rp in ranked
           if rp.cand.kind == "bpipe_interleaved" and rp.cand.b == 4
           and rp.cand.v == 4 and rp.cand.attention == "recompute"
-          and rp.cand.cap is None]
+          and rp.cand.cap is None and rp.cand.depth == 1]
     assert len(il) == 1 and il[0].verdict == "ok", il
     assert il[0].required_gain == pytest.approx(
         (128 + 4 * 7 / 4) / (128 + 2 * 7))
