@@ -1,0 +1,99 @@
+"""Long-context planner sweep: does sequence slicing change the verdict?
+
+For each ``configs.longcontext`` case (the paper's two models at 32k and
+128k) the planner runs twice over the SAME candidate axes — once
+restricted to the unsliced classic (seq_chunks=1, exactly today's
+engine) and once with the case's chunk ladder open — and the table shows
+what slicing buys: the recommended plan, its simulated makespan/MFU, the
+per-stage peak bytes, and whether the recommendation itself moved
+(``verdict_changed``). The paper-condition verdicts (s=2048, Table 3)
+are untouched by design: the default ``SearchSpace`` stays unsliced;
+this sweep is where the c > 1 arm competes.
+
+Peak bytes at c > 1 trade the 2sbh/t boundary stash (divided by c) for
+retained KV (4sbh/t per layer, c-1 slices' worth at the worst slice) —
+see ``memory_model.sliced_unit_bytes`` and docs/longcontext.md for when
+that wins.
+
+Row order is pinned (plain list, declared case order) so
+``BENCH_smoke.json`` diffs stay stable.
+
+Columns: case, arm, makespan, mfu, peak_gib, plan | unsliced twin
+columns | verdict_changed, peak_drop_pct.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.configs import get_config
+from repro.configs.longcontext import LONG_CONTEXT, LongContextCase
+from repro.core.notation import A100_HBM_BYTES, Notation
+from repro.planner import SearchSpace, cost_model_for, plan_config, recommend
+
+#: HBM budgets per case: 80 GiB (A100) everywhere — the whole point is
+#: seeing which shapes ONLY fit (or only rank well) once sliced.
+HBM = A100_HBM_BYTES
+
+SMOKE_CASE = LongContextCase("smoke-32k", "smoke", 32_768, 8, p=4, t=1,
+                             seq_chunkses=(1, 2, 4))
+SMOKE_N = Notation(a=4, b=1, h=256, l=16, s=32_768, v=512, B=8, p=4, t=1)
+SMOKE_HBM = 6 * 1024**3
+
+
+def _cells(prefix: str, rp) -> str:
+    if rp is None:
+        return (f"{prefix}makespan=-,{prefix}mfu=-,{prefix}peak_gib=-,"
+                f"{prefix}plan=infeasible")
+    return (f"{prefix}makespan={rp.makespan:.4g},"
+            f"{prefix}mfu={100 * rp.mfu:.1f},"
+            f"{prefix}peak_gib={rp.feas.peak_gib:.2f},"
+            f"{prefix}plan={rp.cand.label().replace(' ', '/')}")
+
+
+def sweep_case(case: LongContextCase, n: Notation, cfg, hbm: float,
+               print_csv: bool = True) -> List[dict]:
+    cost = cost_model_for(cfg)
+    base = plan_config(n, cfg, hbm, cost=cost,
+                       search=SearchSpace(seq_chunkses=(1,)))
+    sliced = plan_config(n, cfg, hbm, cost=cost,
+                         search=SearchSpace(
+                             seq_chunkses=case.seq_chunkses))
+    rows = []
+    for att in ("recompute", "flash"):
+        b_rp, s_rp = recommend(base, att), recommend(sliced, att)
+        changed = ((b_rp is None) != (s_rp is None)
+                   or (b_rp is not None and s_rp is not None
+                       and b_rp.cand != s_rp.cand))
+        drop = 0.0
+        if b_rp is not None and s_rp is not None and b_rp.feas.peak_bytes:
+            drop = 100.0 * (1.0 - s_rp.feas.peak_bytes
+                            / b_rp.feas.peak_bytes)
+        rows.append({"case": case.name, "attention": att,
+                     "base": b_rp, "sliced": s_rp,
+                     "verdict_changed": changed, "peak_drop_pct": drop})
+        if print_csv:
+            print(f"longcontext_sweep,{case.name},{att},"
+                  + _cells("", s_rp) + "," + _cells("base_", b_rp)
+                  + f",verdict_changed={int(changed)}"
+                  + f",peak_drop_pct={drop:.1f}")
+    return rows
+
+
+def main(print_csv=True, smoke=False):
+    rows = []
+    if smoke:
+        cfg = None   # analytic cost model on a toy Notation
+        rows += sweep_case(SMOKE_CASE, SMOKE_N, cfg, SMOKE_HBM, print_csv)
+        return rows
+    for name in sorted(LONG_CONTEXT):
+        case = LONG_CONTEXT[name]
+        cfg = get_config(case.model)
+        n = case.notation(cfg)
+        rows += sweep_case(case, n, cfg, HBM, print_csv)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(smoke="--smoke" in sys.argv)

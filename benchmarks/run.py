@@ -13,6 +13,7 @@ Prints ``name,...`` CSV rows:
   kernel_bench       Pallas kernels + §3.2 fusion-count analysis
   roofline           per-(arch x shape) roofline terms from the dry-run
   planner_sweep      schedule auto-planner over every registered config
+  longcontext_sweep  sequence-sliced planner verdicts at 32k/128k
 
 ``--smoke`` runs every benchmark on tiny CPU-only shapes (subset grids,
 the two smallest configs for the planner) so the whole suite doubles as
@@ -46,8 +47,9 @@ def main(argv=None) -> None:
     json_path = args.json or ("BENCH_smoke.json" if args.smoke else "")
 
     from benchmarks import (estimator_accuracy, interleaved_sweep,
-                            kernel_bench, memory_balance, planner_sweep,
-                            residency_sweep, roofline_table, table3, table5)
+                            kernel_bench, longcontext_sweep, memory_balance,
+                            planner_sweep, residency_sweep, roofline_table,
+                            table3, table5)
     mods = {
         "table3": table3,
         "table5": table5,
@@ -58,6 +60,7 @@ def main(argv=None) -> None:
         "kernel_bench": kernel_bench,
         "roofline": roofline_table,
         "planner_sweep": planner_sweep,
+        "longcontext_sweep": longcontext_sweep,
     }
     if args.only:
         if args.only not in mods:

@@ -42,9 +42,34 @@ REPRO_FUZZ_EXEC_EXAMPLES="${REPRO_FUZZ_EXEC_EXAMPLES:-6}" \
     python -m pytest -q tests/test_differential.py
 
 # Benchmark suite on tiny CPU-only shapes (includes the planner sweep
-# over the two smallest configs) — schedule/planner regressions fail
-# here, not just in tier-1.
+# over the two smallest configs and the long-context slicing sweep) —
+# schedule/planner regressions fail here, not just in tier-1. The
+# tracked copy under benchmarks/ records the smoke trajectory in-repo;
+# a diff on it in review IS the perf report.
 PYTHONPATH=src python -m benchmarks.run --smoke > /dev/null
+cp BENCH_smoke.json benchmarks/BENCH_smoke.json
+
+# Slicing must not perturb the baseline engine: every unsliced golden
+# case's makespan is recomputed from a fresh compile and compared
+# against the pinned fixture — seq_chunks=1 stays bit-identical.
+PYTHONPATH=src python - <<'PYEOF'
+import json
+import repro.core.plan as P
+import repro.core.simulator as SIM
+cases = [c for c in json.load(open("tests/golden/plan_golden.json"))
+         if "residency" not in c and c.get("seq_chunks", 1) == 1]
+assert len(cases) == 30, f"unsliced golden census changed: {len(cases)}"
+for c in cases:
+    spec = P.ScheduleSpec(c["kind"], c["p"], c["m"],
+                          v=max(c["v"], 1), cap=c["cap"])
+    res = SIM.simulate(SIM.SimConfig(
+        spec=spec, Tf=1.0, Tb=2.0, t_p2p=0.125,
+        evict_bytes=1.0, pair_bw=2.0, pair_hops=1))
+    assert res.makespan == c["makespan"], (
+        f"seq_chunks=1 makespan drifted for {spec.label()}: "
+        f"{res.makespan} != {c['makespan']}")
+print("golden seq_chunks=1 makespans unchanged (30 cases)")
+PYEOF
 
 # Planner acceptance verdicts (paper Table 3): BPipe must win
 # GPT-3-recompute and lose LLaMA. (Captured first, then grepped:

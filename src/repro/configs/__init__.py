@@ -9,6 +9,8 @@ import dataclasses
 from typing import Dict
 
 from repro.configs.base import ModelConfig, TrainConfig  # noqa: F401
+from repro.configs.longcontext import (LONG_CONTEXT,  # noqa: F401
+                                       LongContextCase, get_case)
 
 from repro.configs.recurrentgemma_2b import CONFIG as _recurrentgemma_2b
 from repro.configs.qwen3_14b import CONFIG as _qwen3_14b

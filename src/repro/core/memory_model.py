@@ -65,6 +65,30 @@ def act_bytes_per_stage(n: Notation, attention: str, v: int = 1) -> float:
     return layers * act_bytes_per_layer(n, attention) + 2.0 * n.s * n.b * n.h / n.t
 
 
+def kv_bytes_per_slice(n: Notation, v: int = 1,
+                       seq_chunks: int = 1) -> float:
+    """Post-RoPE (k, v) bytes ONE sequence slice retains per (virtual)
+    stage for later slices' causal attention: 4*(s/c)*b*h/t per layer
+    (k + v, bf16, kv heads folded into h). This is the new dominant
+    long-context term sequence slicing trades the 34sbh/t stash for."""
+    layers = n.l / (n.p * v)
+    return layers * 4.0 * n.s * n.b * n.h / (n.t * seq_chunks)
+
+
+def sliced_unit_bytes(n: Notation, attention: str, v: int = 1,
+                      seq_chunks: int = 1) -> float:
+    """One stash unit's bytes under sequence slicing: 1/c of the stage
+    stash plus the retained-KV prefix the slice's vjp holds, charged at
+    the worst slice (c - 1 earlier slices — a uniform weight, so the
+    compiled plan's unit counts stay the accounting currency). At
+    seq_chunks=1 this is exactly ``act_bytes_per_stage``."""
+    c = seq_chunks
+    base = act_bytes_per_stage(n, attention, v) / c
+    if c == 1:
+        return base
+    return base + (c - 1) * kv_bytes_per_slice(n, v, c)
+
+
 def param_bytes_per_stage(n: Notation, cfg: ModelConfig = None) -> float:
     """Parameter + grad + optimizer bytes per device for one stage."""
     if cfg is not None:
@@ -112,8 +136,17 @@ def per_stage_memory(n: Notation, attention: str, kind: KindOrSpec,
     peaks = sch.peak_stash
     spilled = sch.peak_spilled
     pol = spec.policy
-    per_mb = act_bytes_per_stage(n, attention, spec.v)
+    c = spec.seq_chunks
+    per_mb = sliced_unit_bytes(n, attention, spec.v, c)
     retained = pol.retained_bytes(n, attention, spec.v)
+    if c > 1:
+        # a released slice retains 1/c of the policy's usual bytes
+        # (recompute's boundary input shrinks with the slice) plus its
+        # own KV — the recompute strip keeps (carry, kv) so later
+        # slices' forwards can still read the prefix
+        retained = retained / c
+        if pol.mechanism == "recompute":
+            retained += kv_bytes_per_slice(n, spec.v, c)
     pb = param_bytes_per_stage(n, cfg)
     out = []
     for i in range(n.p):
@@ -165,10 +198,12 @@ def max_micro_batch(n: Notation, attention: str, kind: str,
     return best
 
 
-def eviction_bytes(n: Notation, attention: str, v: int = 1) -> float:
+def eviction_bytes(n: Notation, attention: str, v: int = 1,
+                   seq_chunks: int = 1) -> float:
     """Bytes moved per EVICT/LOAD (one stash unit: a microbatch's stage
-    stash, or 1/v of it for interleaved kinds)."""
-    return act_bytes_per_stage(n, attention, v)
+    stash, 1/v of it for interleaved kinds, or a sequence slice plus its
+    retained-KV prefix for sliced schedules)."""
+    return sliced_unit_bytes(n, attention, v, seq_chunks)
 
 
 def traffic_bytes(n: Notation, attention: str, spec: P.ScheduleSpec) -> float:
@@ -182,7 +217,8 @@ def traffic_bytes(n: Notation, attention: str, spec: P.ScheduleSpec) -> float:
     spec = _as_spec(spec, n)
     if not spec.policy.moves_data:
         return 0.0
-    return P.num_moves(spec) * eviction_bytes(n, attention, spec.v)
+    return P.num_moves(spec) * eviction_bytes(n, attention, spec.v,
+                                              spec.seq_chunks)
 
 
 def balance_report(n: Notation, attention: str) -> Dict[str, List[float]]:

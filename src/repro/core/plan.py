@@ -41,8 +41,8 @@ from repro.core.schedule import B, EVICT, F, LOAD, Instr
 # selective_recompute) before any spec validates against them.
 from repro.memory import policy as respol
 
-# Dependency edge: completion of (op, stage, mb, chunk) upstream.
-DepKey = Tuple[str, int, int, int]
+# Dependency edge: completion of (op, stage, mb, chunk, sl) upstream.
+DepKey = Tuple[str, int, int, int, int]
 
 
 # ---------------------------------------------------------------------------
@@ -79,6 +79,15 @@ class ScheduleSpec:
             cost of ``depth-1`` extra in-flight units of device memory.
             Normalized to 1 when the residency policy moves no bytes
             over a channel (``none``, ``selective_recompute``).
+      seq_chunks: sequence slices per microbatch (SlimPipe direction,
+            docs/longcontext.md). ``seq_chunks=c > 1`` makes one slice
+            the pipeline unit: forwards visit slices in causal order
+            (slice i's attention reads the retained KV of slices < i),
+            backwards run in reverse slice order, and activation stashes
+            shrink to ~1/c of a microbatch plus the retained-KV prefix.
+            Normalized to 1 for kinds without a sliced builder
+            (``ScheduleKind.sliced`` — interleaved kinds cannot slice).
+            ``seq_chunks=1`` is bit-identical to the unsliced engine.
 
     Specs are frozen and hashable — they key the compile cache and can be
     used as dict keys / set members anywhere a "schedule variant" is
@@ -91,6 +100,7 @@ class ScheduleSpec:
     cap: Optional[int] = None
     residency: str = "none"
     depth: int = 1
+    seq_chunks: int = 1
 
     def __post_init__(self):
         entry = sched.SCHEDULES.get(self.kind)
@@ -133,13 +143,24 @@ class ScheduleSpec:
             # plain kinds have exactly one chunk; normalize so the spec's
             # identity doesn't depend on a meaningless v knob
             object.__setattr__(self, "v", 1)
+        if self.seq_chunks < 1:
+            raise ValueError(
+                f"seq_chunks must be >= 1, got {self.seq_chunks}")
+        if self.seq_chunks != 1 and not entry.sliced:
+            # kinds without a sliced builder (interleaved kinds — the
+            # sliced ramp deadlocks against chunk-major unit order — and
+            # plugin kinds that never opted in) run unsliced
+            object.__setattr__(self, "seq_chunks", 1)
+        # caps count sliced units, and the default bound widens by the
+        # extra seq_chunks - 1 warmup slices (schedule.schedule_cap)
+        cap_extra = self.seq_chunks - 1
         if entry.balanced:
             if self.cap is not None:
                 if self.cap < 2:
                     raise ValueError(
                         f"cap must be >= 2 (one live forward + the "
                         f"in-flight LOAD transient), got {self.cap}")
-                if self.cap == entry.default_cap(self.p, self.v):
+                if self.cap == entry.default_cap(self.p, self.v) + cap_extra:
                     object.__setattr__(self, "cap", None)
         elif pol.active:
             if self.cap is not None:
@@ -147,7 +168,7 @@ class ScheduleSpec:
                     raise ValueError(
                         f"cap must be >= 2 (one live forward + the "
                         f"in-flight restore transient), got {self.cap}")
-                if self.cap == pol.default_cap(self.p, self.v):
+                if self.cap == pol.default_cap(self.p, self.v) + cap_extra:
                     object.__setattr__(self, "cap", None)
         else:
             object.__setattr__(self, "cap", None)
@@ -184,14 +205,17 @@ class ScheduleSpec:
 
     @property
     def resolved_cap(self) -> Optional[int]:
-        """The effective per-device stash bound (None = unbounded)."""
+        """The effective per-device stash bound (None = unbounded). Caps
+        count sliced units; defaults widen by seq_chunks - 1 (the extra
+        sliced warmup ramp)."""
+        extra = self.seq_chunks - 1
         if self.balanced:
             return self.cap if self.cap is not None \
-                else self.entry.default_cap(self.p, self.v)
+                else self.entry.default_cap(self.p, self.v) + extra
         pol = self.policy
         if pol.active:
             return self.cap if self.cap is not None \
-                else pol.default_cap(self.p, self.v)
+                else pol.default_cap(self.p, self.v) + extra
         return None
 
     @property
@@ -213,18 +237,20 @@ class ScheduleSpec:
             bits.append(f"cap={self.cap if self.cap is not None else 'def'}")
         if self.depth != 1:
             bits.append(f"depth={self.depth}")
+        if self.seq_chunks != 1:
+            bits.append(f"c={self.seq_chunks}")
         return " ".join(bits)
 
     def to_dict(self) -> Dict[str, Any]:
         return {"kind": self.kind, "p": self.p, "m": self.m,
                 "v": self.v, "cap": self.cap, "residency": self.residency,
-                "depth": self.depth}
+                "depth": self.depth, "seq_chunks": self.seq_chunks}
 
     #: Exactly the keys ``to_dict`` emits — ``from_dict`` rejects anything
     #: else so a typo'd or stale spec JSON fails loudly instead of
     #: silently dropping a dimension.
     DICT_KEYS = frozenset(("kind", "p", "m", "v", "cap", "residency",
-                           "depth"))
+                           "depth", "seq_chunks"))
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "ScheduleSpec":
@@ -237,7 +263,8 @@ class ScheduleSpec:
                    v=int(d.get("v", 1)),
                    cap=None if d.get("cap") is None else int(d["cap"]),
                    residency=str(d.get("residency", "none")),
-                   depth=int(d.get("depth", 1)))
+                   depth=int(d.get("depth", 1)),
+                   seq_chunks=int(d.get("seq_chunks", 1)))
 
 
 # ---------------------------------------------------------------------------
@@ -270,35 +297,43 @@ class PlannedInstr:
     mb: int
     chunk: int
     vs: int                        # virtual stage = chunk * p + stage
-    dep: Optional[DepKey] = None   # (op, stage, mb, chunk) upstream
+    dep: Optional[DepKey] = None   # (op, stage, mb, chunk, sl) upstream
     dep_hop: bool = False
     phase: str = ""                # "", ISSUE or WAIT
+    sl: int = 0                    # sequence slice (seq_chunks > 1 only)
 
     @property
-    def key(self) -> Tuple[int, int, int]:
-        return (self.stage, self.mb, self.chunk)
+    def key(self) -> Tuple[int, int, int, int]:
+        return (self.stage, self.mb, self.chunk, self.sl)
 
     @property
     def done_key(self) -> DepKey:
         """The completion record this instruction publishes."""
-        return (self.op, self.stage, self.mb, self.chunk)
+        return (self.op, self.stage, self.mb, self.chunk, self.sl)
 
     @property
     def is_wait(self) -> bool:
         return self.phase == WAIT
 
     def as_instr(self) -> Instr:
-        return Instr(self.op, self.mb, self.chunk)
+        return Instr(self.op, self.mb, self.chunk, self.sl)
 
     def __repr__(self):
         c = f".c{self.chunk}" if self.chunk else ""
+        s = f".s{self.sl}" if self.sl else ""
         w = "+w" if self.phase == WAIT else ""
-        return f"{self.op}{self.mb}{c}{w}@{self.stage}"
+        return f"{self.op}{self.mb}{c}{s}{w}@{self.stage}"
 
 
 def _plan_stream(spec: ScheduleSpec, stage: int,
                  raw: Sequence[Instr]) -> Tuple[PlannedInstr, ...]:
-    """Resolve each raw instruction's dependency edge and device hop."""
+    """Resolve each raw instruction's dependency edge and device hop.
+
+    Every dependency shares the instruction's sequence slice: a sliced
+    F(mb, sl) consumes the previous virtual stage's F of the SAME slice,
+    and the causal order across slices (slice i's attention reads the
+    retained KV of slices < i on the same stage) is already program
+    order within the stage's stream, so it needs no extra edge."""
     p, nv = spec.p, spec.n_virtual
     out: List[PlannedInstr] = []
     for ins in raw:
@@ -308,27 +343,27 @@ def _plan_stream(spec: ScheduleSpec, stage: int,
         if ins.op == F:
             if vs > 0:
                 pi, pc = (vs - 1) % p, (vs - 1) // p
-                dep = (F, pi, ins.mb, pc)
+                dep = (F, pi, ins.mb, pc, ins.sl)
                 hop = pi != stage
         elif ins.op == B:
             if vs == nv - 1:
-                dep = (F, stage, ins.mb, ins.chunk)   # own forward
+                dep = (F, stage, ins.mb, ins.chunk, ins.sl)  # own forward
             else:
                 ni, nc = (vs + 1) % p, (vs + 1) // p
-                dep = (B, ni, ins.mb, nc)
+                dep = (B, ni, ins.mb, nc, ins.sl)
                 hop = ni != stage
         elif ins.op in respol.RELEASE_OPS:
             # any residency release (EVICT/OFFLOAD/DROP/...) waits on the
             # unit's own forward
-            dep = (F, stage, ins.mb, ins.chunk)
+            dep = (F, stage, ins.mb, ins.chunk, ins.sl)
         elif ins.op in respol.RESTORE_OPS:
             # any restore (LOAD/FETCH/RECOMPUTE/...) waits on its release
             dep = (respol.RESTORE_OPS[ins.op].release_op,
-                   stage, ins.mb, ins.chunk)
+                   stage, ins.mb, ins.chunk, ins.sl)
         else:
             raise ValueError(f"unknown op {ins.op!r}")
         out.append(PlannedInstr(ins.op, stage, ins.mb, ins.chunk, vs,
-                                dep, hop))
+                                dep, hop, sl=ins.sl))
     return tuple(out)
 
 
@@ -349,15 +384,15 @@ def _split_stream(stream: Sequence[PlannedInstr]) -> Tuple[PlannedInstr, ...]:
     accounting runs on the unsplit stream and stays bit-identical.
     """
     out: List[PlannedInstr] = []
-    pending: Dict[Tuple[str, int, int], PlannedInstr] = {}
+    pending: Dict[Tuple[str, int, int, int], PlannedInstr] = {}
     for ins in stream:
         if ins.op in respol.RELEASE_OPS:
             out.append(dataclasses.replace(ins, phase=ISSUE))
-            pending[(ins.op, ins.mb, ins.chunk)] = dataclasses.replace(
+            pending[(ins.op, ins.mb, ins.chunk, ins.sl)] = dataclasses.replace(
                 ins, phase=WAIT, dep=ins.done_key, dep_hop=False)
         elif ins.op in respol.RESTORE_OPS:
             rel = respol.RESTORE_OPS[ins.op].release_op
-            rel_wait = pending.pop((rel, ins.mb, ins.chunk), None)
+            rel_wait = pending.pop((rel, ins.mb, ins.chunk, ins.sl), None)
             if rel_wait is not None:
                 out.append(rel_wait)
             out.append(dataclasses.replace(ins, phase=ISSUE))
@@ -454,7 +489,7 @@ def compile_plan(spec: ScheduleSpec) -> Schedule:
     cap = spec.resolved_cap
 
     def raw(i: int) -> sched.Stream:
-        base = entry.stream(p, spec.m, i, spec.v, spec.cap)
+        base = entry.stream(p, spec.m, i, spec.v, spec.cap, spec.seq_chunks)
         if entry.balanced or not pol.active:
             # balanced builders embed their own spill (EVICT/LOAD)
             return base
@@ -597,6 +632,12 @@ def _account(streams: Mapping[int, Sequence[Any]], p: int,
             return None
         counts[i] -= 1
         if respol.RELEASE_OPS[ins.op].swap:
+            if i not in partner:
+                # the unpaired middle stage of an odd-p bpipe ring: a cap
+                # tight enough to make it spill has nowhere to swap to
+                raise ValueError(
+                    f"cap forces stage {i} to evict but it has no swap "
+                    f"partner (odd p): unbalanceable")
             counts[partner[i]] += 1
             traces[partner[i]].append(counts[partner[i]])
         else:

@@ -39,35 +39,67 @@ class Instr:
     op: str
     mb: int
     chunk: int = 0   # virtual-stage chunk (interleaved schedules only)
+    sl: int = 0      # sequence slice (seq_chunks > 1 schedules only)
 
     def __repr__(self):
         c = f".c{self.chunk}" if self.chunk else ""
-        return f"{self.op}{self.mb}{c}"
+        s = f".s{self.sl}" if self.sl else ""
+        return f"{self.op}{self.mb}{c}{s}"
 
 
 Stream = List[Instr]
 
 
-def gpipe(p: int, m: int, stage: int) -> Stream:
-    """All forwards, then all backwards. Peak stash = m."""
-    return [Instr(F, j) for j in range(m)] + [Instr(B, j) for j in range(m)]
+def gpipe(p: int, m: int, stage: int, seq_chunks: int = 1) -> Stream:
+    """All forwards, then all backwards. Peak stash = m (m * seq_chunks
+    sliced units when the sequence is sliced).
+
+    Sliced forwards run slices in causal order (slice i's attention reads
+    the retained KV of slices < i); backwards run slices in REVERSE order
+    within each microbatch so the executor can accumulate the prefix-KV
+    cotangents in one pass (docs/longcontext.md)."""
+    c = seq_chunks
+    return ([Instr(F, j, 0, s) for j in range(m) for s in range(c)]
+            + [Instr(B, j, 0, c - 1 - s) for j in range(m)
+               for s in range(c)])
 
 
-def one_f_one_b(p: int, m: int, stage: int) -> Stream:
+def one_f_one_b(p: int, m: int, stage: int, seq_chunks: int = 1) -> Stream:
     """Non-interleaved 1F1B (DAPPLE / Megatron default).
 
     Stage i runs min(p-i-1, m) warmup forwards, then alternates F/B, then
     drains. Peak in-flight stash = min(p - i, m)  — the paper's "stage x
     stores p - x activations" imbalance.
-    """
-    warmup = min(p - stage - 1, m)
-    out: Stream = [Instr(F, j) for j in range(warmup)]
-    nf, nb = warmup, 0
-    while nf < m:
-        out.append(Instr(F, nf)); nf += 1
-        out.append(Instr(B, nb)); nb += 1
-    while nb < m:
-        out.append(Instr(B, nb)); nb += 1
+
+    ``seq_chunks=c`` slices every microbatch into c sequence slices
+    (SlimPipe direction): the pipeline unit becomes one slice, forwards
+    visit slices in causal order, backwards in reverse order within each
+    microbatch, and warmup grows by c - 1 (the extra ramp that keeps the
+    last stage's B0 fed). At c=1 this is byte-for-byte the classic
+    stream."""
+    c = seq_chunks
+    total = m * c
+    warmup = min(p - stage - 1 + (c - 1), total)
+
+    def fwd(k):
+        return k // c, k % c              # (mb, sl): causal slice order
+
+    def bwd(k):
+        return k // c, c - 1 - k % c      # reverse slice order within mb
+
+    out: Stream = []
+    nf = nb = 0
+    for _ in range(warmup):
+        mb, sl = fwd(nf)
+        out.append(Instr(F, mb, 0, sl)); nf += 1
+    while nf < total:
+        mb, sl = fwd(nf)
+        out.append(Instr(F, mb, 0, sl)); nf += 1
+        mb, sl = bwd(nb)
+        out.append(Instr(B, mb, 0, sl)); nb += 1
+    while nb < total:
+        mb, sl = bwd(nb)
+        out.append(Instr(B, mb, 0, sl)); nb += 1
     return out
 
 
@@ -90,7 +122,8 @@ def _balance(base: Stream, cap: int) -> Stream:
     return spill(base, cap, EVICT, LOAD)
 
 
-def bpipe(p: int, m: int, stage: int, cap: int | None = None) -> Stream:
+def bpipe(p: int, m: int, stage: int, cap: int | None = None,
+          seq_chunks: int = 1) -> Stream:
     """BPipe = 1F1B + continuous activation balancing at cap
     ceil((p+2)/2) (Kim et al.). Stages with steady in-flight
     p-stage <= cap never evict (acceptors / middle stages). In steady
@@ -102,10 +135,14 @@ def bpipe(p: int, m: int, stage: int, cap: int | None = None) -> Stream:
     over it (looser cap -> fewer evictions but more evictor memory;
     tighter -> the reverse, pushed onto the acceptor). Must be >= 2
     (one live forward plus the in-flight LOAD transient).
+
+    With ``seq_chunks=c``, cap counts sliced units and the default bound
+    grows by the extra c - 1 warmup slices (each 1/c the bytes, so the
+    byte budget still shrinks — see ``memory_model``).
     """
-    cap = bpipe_cap(p) if cap is None else cap
+    cap = bpipe_cap(p) + (seq_chunks - 1) if cap is None else cap
     assert cap >= 2, cap
-    return _balance(one_f_one_b(p, m, stage), cap)
+    return _balance(one_f_one_b(p, m, stage, seq_chunks), cap)
 
 
 # ---------------------------------------------------------------------------
@@ -192,8 +229,16 @@ class ScheduleKind:
                    m % p == 0, p*v <= num_layers).
       balanced:    BPipe family — emits EVICT/LOAD under a stash cap and
                    accepts a ``cap`` override.
+      sliced:      the builder accepts a ``seq_chunks`` keyword and emits
+                   per-sequence-slice units (docs/longcontext.md).
+                   ``ScheduleSpec`` normalizes seq_chunks to 1 for kinds
+                   without it. Interleaved kinds cannot slice: the
+                   sliced warmup ramp deadlocks against the chunk-major
+                   unit order.
       default_cap: ``(p, v) -> int`` — the kind's default stash bound
-                   (balanced kinds only).
+                   (balanced kinds only). Sliced caps count slice units;
+                   the builder/spec add the (seq_chunks - 1) warmup
+                   allowance so this signature stays (p, v).
       cap_roof:    ``(p, m, v) -> int`` — the cap above which balancing
                    degenerates to the unbalanced twin; bounds the
                    planner's cap search (balanced kinds only).
@@ -202,6 +247,7 @@ class ScheduleKind:
     builder: Callable[..., Stream]
     interleaved: bool = False
     balanced: bool = False
+    sliced: bool = False
     default_cap: Optional[Callable[[int, int], int]] = None
     cap_roof: Optional[Callable[[int, int, int], int]] = None
 
@@ -213,12 +259,14 @@ class ScheduleKind:
                 f"cap_roof — the planner's cap search depends on both")
 
     def stream(self, p: int, m: int, stage: int, v: int = 1,
-               cap: Optional[int] = None) -> Stream:
+               cap: Optional[int] = None, seq_chunks: int = 1) -> Stream:
         """Build stage ``stage``'s raw instruction stream (the normalized
         entry point ``plan.compile_plan`` calls)."""
         kw = {}
         if self.balanced and cap is not None:
             kw["cap"] = cap
+        if self.sliced and seq_chunks != 1:
+            kw["seq_chunks"] = seq_chunks
         if self.interleaved:
             return self.builder(p, m, stage, v, **kw)
         return self.builder(p, m, stage, **kw)
@@ -260,9 +308,9 @@ def unregister(name: str) -> None:
 
 
 for _entry in (
-    ScheduleKind("gpipe", gpipe),
-    ScheduleKind("1f1b", one_f_one_b),
-    ScheduleKind("bpipe", bpipe, balanced=True,
+    ScheduleKind("gpipe", gpipe, sliced=True),
+    ScheduleKind("1f1b", one_f_one_b, sliced=True),
+    ScheduleKind("bpipe", bpipe, balanced=True, sliced=True,
                  default_cap=lambda p, v: bpipe_cap(p),
                  cap_roof=lambda p, m, v: max(min(p, m), 2)),
     ScheduleKind("1f1b_interleaved", one_f_one_b_interleaved,
@@ -285,14 +333,21 @@ def virtual_stage(stage: int, chunk: int, p: int) -> int:
 
 
 def schedule_cap(kind: str, p: int, v: int = 2,
-                 cap: int | None = None) -> int | None:
+                 cap: int | None = None,
+                 seq_chunks: int = 1) -> int | None:
     """The schedule's per-device stash bound (or the ``cap`` override for
-    balanced kinds), or None if unbounded."""
+    balanced kinds), or None if unbounded. Sliced schedules
+    (seq_chunks > 1) count slice units and widen the default bound by the
+    extra warmup slices."""
     entry = SCHEDULES[kind]
     if not entry.balanced:
         return None
-    return cap if cap is not None \
-        else entry.default_cap(p, v if entry.interleaved else 1)
+    if cap is not None:
+        return cap
+    base = entry.default_cap(p, v if entry.interleaved else 1)
+    if entry.sliced and seq_chunks > 1:
+        base += seq_chunks - 1
+    return base
 
 
 # ---------------------------------------------------------------------------

@@ -102,7 +102,7 @@ class SimResult:
     makespan: float
     busy: List[float]           # per-stage compute-busy time
     load_stall: float           # total time backwards waited on restores
-    timeline: Dict[int, List]   # (op, mb, chunk, start, end) per stage
+    timeline: Dict[int, List]   # (op, mb, chunk, sl, start, end) per stage
     move_time: float = 0.0      # summed residency-op time (link occupancy
                                 # for swap/host moves, re-forward time for
                                 # recompute) — the overhead exposure that
@@ -128,8 +128,14 @@ def _simulate(cfg: SimConfig, greedy: bool = True) -> SimResult:
     schedule = P.compile_plan(spec)
     p, v = spec.p, spec.v
     # One full microbatch of F work per device is Tf regardless of v:
-    # each chunk holds 1/v of the device's layers.
-    tf, tb = cfg.Tf / v, cfg.Tb / v
+    # each chunk holds 1/v of the device's layers. Sequence slicing
+    # divides the unit again — a slice is 1/seq_chunks of the tokens, so
+    # sliced F/B cost Tf/(v*c), Tb/(v*c) on the compute frontier. (The
+    # quadratic attention share of a slice actually shrinks sub-linearly;
+    # the planner's cost model owns that refinement, the engine prices
+    # the linear part.)
+    c = spec.seq_chunks
+    tf, tb = cfg.Tf / (v * c), cfg.Tb / (v * c)
     t_move = (cfg.evict_bytes / cfg.pair_bw) * cfg.pair_hops \
         if cfg.evict_bytes else 0.0
     t_d2h = cfg.evict_bytes / cfg.d2h_bw if cfg.evict_bytes else 0.0
@@ -142,13 +148,14 @@ def _simulate(cfg: SimConfig, greedy: bool = True) -> SimResult:
     window = spec.depth * (tf + tb)
 
     t_stage = {i: 0.0 for i in range(p)}    # stage compute frontier
-    done: Dict[P.DepKey, float] = {}        # (op, stage, mb, chunk) -> end
+    done: Dict[P.DepKey, float] = {}    # (op, stage, mb, chunk, sl) -> end
     busy = {i: 0.0 for i in range(p)}
     state = {"stall": 0.0, "last_b": 0.0, "move": 0.0}
     timeline: Dict[int, List] = {i: [] for i in range(p)}
 
     def finish(i, ins, start_t, end_t):
-        timeline[i].append((ins.op, ins.mb, ins.chunk, start_t, end_t))
+        timeline[i].append((ins.op, ins.mb, ins.chunk, ins.sl,
+                            start_t, end_t))
 
     def on_f(i, ins):
         if ins.dep is None:
@@ -172,7 +179,7 @@ def _simulate(cfg: SimConfig, greedy: bool = True) -> SimResult:
         hop = cfg.t_p2p if ins.dep_hop else 0.0
         start_t = max(t_stage[i], dep + hop)
         for rop in _stall_ops:     # data-moving restores gate the backward
-            le = done.get((rop, i, ins.mb, ins.chunk))
+            le = done.get((rop, i, ins.mb, ins.chunk, ins.sl))
             if le is not None and le > start_t:
                 state["stall"] += le - start_t
                 start_t = le
@@ -273,3 +280,13 @@ def interleaved_ideal_makespan(cfg: SimConfig) -> float:
     """Megatron interleaved idealization: the pipeline ramp shrinks to
     (p - 1)/v flush units, so makespan ~= (m + (p - 1)/v)(Tf + Tb)."""
     return (cfg.m + (cfg.p - 1) / cfg.v) * (cfg.Tf + cfg.Tb)
+
+
+def sliced_ideal_makespan(cfg: SimConfig) -> float:
+    """Sequence-sliced idealization (SlimPipe direction): the fill/drain
+    ramp is one slice per stage hop, so it shrinks c-fold and
+    makespan ~= (m + (p - 1)/c)(Tf + Tb). At c=1 this is exactly the
+    paper's eq-2 bound; for c > 1 slicing trades bubble for retained-KV
+    memory — the quantity ``memory_model`` charges back."""
+    c = cfg.to_spec().seq_chunks
+    return (cfg.m + (cfg.p - 1) / c) * (cfg.Tf + cfg.Tb)

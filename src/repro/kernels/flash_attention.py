@@ -30,7 +30,7 @@ NEG_INF = -0.7 * float(np.finfo(np.float32).max)
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
             scale, causal, window, softcap, block_q, block_k, nkv_blocks,
-            kv_len):
+            kv_len, q_offset=0):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -45,11 +45,14 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
     #   causal: kv blocks strictly above the diagonal contribute nothing;
     #   window: kv blocks whose newest key is older than the oldest
     #           query's horizon contribute nothing.
+    # q_offset shifts query positions by the retained-KV prefix length
+    # (sequence-sliced schedules: slice queries start at global position
+    # q_offset while keys cover [0, kv_len)).
     relevant = ki * block_k < kv_len
     if causal:  # oldest query in this q tile vs newest key in kv tile
-        relevant &= ki * block_k <= qi * block_q + block_q - 1
+        relevant &= ki * block_k <= qi * block_q + q_offset + block_q - 1
     if window:
-        relevant &= (ki + 1) * block_k - 1 > qi * block_q - window
+        relevant &= (ki + 1) * block_k - 1 > qi * block_q + q_offset - window
 
     @pl.when(relevant)
     def _block():
@@ -67,7 +70,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
         if softcap:
             s = softcap * jnp.tanh(s / softcap)
 
-        qpos = qi * block_q + jax.lax.broadcasted_iota(
+        qpos = qi * block_q + q_offset + jax.lax.broadcasted_iota(
             jnp.int32, (bq, m, bk), 0)
         kpos = ki * block_k + jax.lax.broadcasted_iota(
             jnp.int32, (bq, m, bk), 2)
@@ -102,8 +105,14 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
 
 def flash_attention_fwd(q, k, v, *, causal=True, window=0, softcap=0.0,
                         scale=None, block_q=128, block_k=128,
-                        interpret=False, return_lse=False):
-    """q: (b, sq, nq, hd); k/v: (b, sk, nkv, hd). Returns (b, sq, nq, hd)."""
+                        interpret=False, return_lse=False, q_offset=0):
+    """q: (b, sq, nq, hd); k/v: (b, sk, nkv, hd). Returns (b, sq, nq, hd).
+
+    ``q_offset`` shifts the queries' positions for the causal/window
+    masks: query row i is at global position i + q_offset while keys
+    cover [0, sk) — the sequence-sliced case where the kv side carries a
+    retained prefix of q_offset earlier keys (docs/longcontext.md).
+    """
     b, sq, nq, hd = q.shape
     sk, nkv = k.shape[1], k.shape[2]
     assert nq % nkv == 0
@@ -128,7 +137,7 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=0, softcap=0.0,
     kernel = functools.partial(
         _kernel, scale=scale, causal=causal, window=window,
         softcap=softcap, block_q=block_q, block_k=block_k,
-        nkv_blocks=nkv_blocks, kv_len=sk)
+        nkv_blocks=nkv_blocks, kv_len=sk, q_offset=q_offset)
 
     out = pl.pallas_call(
         kernel,
@@ -172,7 +181,7 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=0, softcap=0.0,
 # Backward kernels (flash-attention-2 style two-pass)
 # ---------------------------------------------------------------------------
 def _recompute_p(q, k, qi, ki, *, scale, causal, window, softcap, block_q,
-                 block_k, kv_len, lse):
+                 block_k, kv_len, lse, q_offset=0):
     """Recompute the (bq, m, bk) probability tile + softcap chain factor."""
     bq, m, hd = q.shape
     bk = k.shape[0]
@@ -185,7 +194,8 @@ def _recompute_p(q, k, qi, ki, *, scale, causal, window, softcap, block_q,
         t = jnp.tanh(s / softcap)
         s = softcap * t
         dcap = 1.0 - t * t           # d(softcap(s))/ds
-    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (bq, m, bk), 0)
+    qpos = qi * block_q + q_offset + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, m, bk), 0)
     kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, m, bk), 2)
     mask = kpos < kv_len
     if causal:
@@ -197,18 +207,19 @@ def _recompute_p(q, k, qi, ki, *, scale, causal, window, softcap, block_q,
     return p, dcap
 
 
-def _relevant(qi, ki, *, causal, window, block_q, block_k, kv_len):
+def _relevant(qi, ki, *, causal, window, block_q, block_k, kv_len,
+              q_offset=0):
     rel = ki * block_k < kv_len
     if causal:
-        rel &= ki * block_k <= qi * block_q + block_q - 1
+        rel &= ki * block_k <= qi * block_q + q_offset + block_q - 1
     if window:
-        rel &= (ki + 1) * block_k - 1 > qi * block_q - window
+        rel &= (ki + 1) * block_k - 1 > qi * block_q + q_offset - window
     return rel
 
 
 def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dlt_ref, dq_ref,
                acc_scr, *, scale, causal, window, softcap, block_q, block_k,
-               nkv_blocks, kv_len):
+               nkv_blocks, kv_len, q_offset=0):
     qi, ki = pl.program_id(2), pl.program_id(3)
 
     @pl.when(ki == 0)
@@ -216,7 +227,7 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dlt_ref, dq_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     @pl.when(_relevant(qi, ki, causal=causal, window=window, block_q=block_q,
-                       block_k=block_k, kv_len=kv_len))
+                       block_k=block_k, kv_len=kv_len, q_offset=q_offset))
     def _block():
         q = q_ref[0, :, 0]
         k = k_ref[0, :, 0]
@@ -229,7 +240,7 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dlt_ref, dq_ref,
         p, dcap = _recompute_p(
             q, k, qi, ki, scale=scale, causal=causal, window=window,
             softcap=softcap, block_q=block_q, block_k=block_k,
-            kv_len=kv_len, lse=lse)
+            kv_len=kv_len, lse=lse, q_offset=q_offset)
         dp = jax.lax.dot_general(
             do.reshape(bq * m, hd), v.astype(jnp.float32),
             (((1,), (1,)), ((), ())),
@@ -247,7 +258,7 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dlt_ref, dq_ref,
 
 def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dlt_ref,
                 dk_ref, dv_ref, dk_scr, dv_scr, *, scale, causal, window,
-                softcap, block_q, block_k, nq_blocks, kv_len):
+                softcap, block_q, block_k, nq_blocks, kv_len, q_offset=0):
     ki, qi = pl.program_id(2), pl.program_id(3)
 
     @pl.when(qi == 0)
@@ -256,7 +267,7 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dlt_ref,
         dv_scr[...] = jnp.zeros_like(dv_scr)
 
     @pl.when(_relevant(qi, ki, causal=causal, window=window, block_q=block_q,
-                       block_k=block_k, kv_len=kv_len))
+                       block_k=block_k, kv_len=kv_len, q_offset=q_offset))
     def _block():
         q = q_ref[0, :, 0]
         k = k_ref[0, :, 0]
@@ -269,7 +280,7 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dlt_ref,
         p, dcap = _recompute_p(
             q, k, qi, ki, scale=scale, causal=causal, window=window,
             softcap=softcap, block_q=block_q, block_k=block_k,
-            kv_len=kv_len, lse=lse)
+            kv_len=kv_len, lse=lse, q_offset=q_offset)
         # dv += p^T do   (sum over bq*m rows)
         dv_scr[...] += jax.lax.dot_general(
             p.reshape(bq * m, bk), do.reshape(bq * m, hd),
@@ -293,11 +304,11 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dlt_ref,
 
 def flash_attention_bwd(q, k, v, out, lse, dout, *, causal=True, window=0,
                         softcap=0.0, scale=None, block_q=128, block_k=128,
-                        interpret=False):
+                        interpret=False, q_offset=0):
     """dq, dk, dv via the two-pass flash backward.
 
     q/dout: (b, sq, nq, hd); k/v: (b, sk, nkv, hd);
-    lse: (b, sq, nkv, m) from the forward.
+    lse: (b, sq, nkv, m) from the forward. ``q_offset`` as in the fwd.
     """
     b, sq, nq, hd = q.shape
     sk, nkv = k.shape[1], k.shape[2]
@@ -329,7 +340,8 @@ def flash_attention_bwd(q, k, v, out, lse, dout, *, causal=True, window=0,
 
     # NOTE: index maps differ between the two passes; built per pass.
     common = dict(scale=scale, causal=causal, window=window, softcap=softcap,
-                  block_q=block_q, block_k=block_k, kv_len=sk)
+                  block_q=block_q, block_k=block_k, kv_len=sk,
+                  q_offset=q_offset)
 
     # --- pass 1: dq; grid (b, nkv, q_blocks, kv_blocks[arbitrary]) ----------
     dq = pl.pallas_call(

@@ -19,29 +19,35 @@ from repro.kernels.flash_attention import (flash_attention_bwd,
 
 
 @functools.partial(jax.custom_vjp,
-                   nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
 def flash_attention(q, k, v, causal=True, window=0, softcap=0.0,
-                    scale=None, block_q=128, block_k=128, interpret=False):
+                    scale=None, block_q=128, block_k=128, interpret=False,
+                    q_offset=0):
+    """``q_offset`` shifts query positions for the causal/window masks
+    (sequence-sliced attention over a retained-KV prefix of that many
+    keys — docs/longcontext.md). 0 is plain full-sequence attention."""
     return flash_attention_fwd(
         q, k, v, causal=causal, window=window, softcap=softcap,
-        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret)
+        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret,
+        q_offset=q_offset)
 
 
 def _fa_fwd(q, k, v, causal, window, softcap, scale, block_q, block_k,
-            interpret):
+            interpret, q_offset):
     out, lse = flash_attention_fwd(
         q, k, v, causal=causal, window=window, softcap=softcap,
         scale=scale, block_q=block_q, block_k=block_k, interpret=interpret,
-        return_lse=True)
+        return_lse=True, q_offset=q_offset)
     return out, (q, k, v, out, lse)
 
 
 def _fa_bwd(causal, window, softcap, scale, block_q, block_k, interpret,
-            res, g):
+            q_offset, res, g):
     q, k, v, out, lse = res
     return flash_attention_bwd(
         q, k, v, out, lse, g, causal=causal, window=window, softcap=softcap,
-        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret)
+        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret,
+        q_offset=q_offset)
 
 
 flash_attention.defvjp(_fa_fwd, _fa_bwd)

@@ -12,8 +12,10 @@ NEG_INF = -0.7 * float(np.finfo(np.float32).max)
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
-                        scale=None):
-    """q: (b, sq, nq, hd); k/v: (b, sk, nkv, hd), nq % nkv == 0."""
+                        scale=None, q_offset=0):
+    """q: (b, sq, nq, hd); k/v: (b, sk, nkv, hd), nq % nkv == 0.
+    ``q_offset``: query row i sits at global position i + q_offset
+    (sequence-sliced attention over a retained-KV prefix)."""
     b, sq, nq, hd = q.shape
     sk, nkv = k.shape[1], k.shape[2]
     m = nq // nkv
@@ -22,7 +24,7 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
     s = jnp.einsum("bqgmh,bkgh->bgmqk", qr, k).astype(jnp.float32) * scale
     if softcap:
         s = softcap * jnp.tanh(s / softcap)
-    qpos = jnp.arange(sq)[:, None]
+    qpos = jnp.arange(sq)[:, None] + q_offset
     kpos = jnp.arange(sk)[None, :]
     mask = jnp.ones((sq, sk), bool)
     if causal:

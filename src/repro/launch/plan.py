@@ -69,6 +69,11 @@ def main(argv=None):
                     help="transfer-overlap depths to search for "
                          "residency-managed plans (in-flight moves per "
                          "channel; depth 1 = serialized classic)")
+    ap.add_argument("--seq-chunks", type=int, nargs="*", default=[1],
+                    help="sequence slices per microbatch to search, e.g. "
+                         "--seq-chunks 1 2 4 (docs/longcontext.md; c > 1 "
+                         "only on kinds with a sliced builder and seq "
+                         "lengths c divides; default: unsliced only)")
     ap.add_argument("--overhead", type=float, default=0.0,
                     help="fractional BPipe overhead inflating break-even")
     ap.add_argument("--top", type=int, default=16,
@@ -86,6 +91,8 @@ def main(argv=None):
                     help="micro batch size the trace ran at")
     ap.add_argument("--trace-v", type=int, default=1,
                     help="chunks per device in the traced run")
+    ap.add_argument("--trace-c", type=int, default=1,
+                    help="sequence slices per microbatch in the traced run")
     ap.add_argument("--trace-attention", default="none",
                     choices=["none", "recompute", "flash"],
                     help="attention arm the traced run used (other arms "
@@ -108,11 +115,13 @@ def main(argv=None):
                                  f"{valid}")
         kw["residencies"] = tuple(args.residency)
     search = SearchSpace(attentions=attentions, vs=tuple(args.v),
-                         depths=tuple(args.depth), **kw)
+                         depths=tuple(args.depth),
+                         seq_chunkses=tuple(args.seq_chunks), **kw)
 
     if args.trace:
         events = calibrate.load_chrome_trace(args.trace)
-        costs = calibrate.fit_trace(events, v=args.trace_v, b=args.trace_b)
+        costs = calibrate.fit_trace(events, v=args.trace_v, b=args.trace_b,
+                                    seq_chunks=args.trace_c)
         cost = calibrate.TraceCostModel(costs, peak_per_chip=CHIPS[args.chip],
                                         attention=args.trace_attention)
         print(f"# calibrated from {args.trace}: Tf={costs.Tf:.4g}s "

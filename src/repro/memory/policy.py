@@ -55,30 +55,32 @@ def spill(base: Stream, cap: int, release_op: str, restore_op: str) -> Stream:
     local stash would exceed ``cap`` (including the in-flight restore
     transient), the unit whose backward is farthest away (the newest
     held) is released right after a forward, and restored just before
-    its own backward. Units are (mb, chunk). With
+    its own backward. Units are (mb, chunk, sl) — a sequence-sliced
+    stream's slices spill independently, like any other unit. With
     ``(release_op, restore_op) = (EVICT, LOAD)`` this is exactly BPipe's
     continuous balancing (``schedule._balance``)."""
     released: set = set()
     held: list = []                   # local stash, oldest first
     out: Stream = []
     for pos, ins in enumerate(base):
-        key = (ins.mb, ins.chunk)
+        key = (ins.mb, ins.chunk, ins.sl)
         if ins.op == F:
             # Will the next backward's restore land while this F's output
             # is still held? Then budget one extra slot for it.
             nxt = base[pos + 1] if pos + 1 < len(base) else None
             pending = 1 if (nxt is not None and nxt.op == B
-                            and (nxt.mb, nxt.chunk) in released) else 0
+                            and (nxt.mb, nxt.chunk, nxt.sl) in released) \
+                else 0
             # Proactively make room *before* computing the forward.
             while len(held) + 1 + pending > cap:
-                vmb, vchunk = held.pop()   # newest held
-                out.append(Instr(release_op, vmb, vchunk))
-                released.add((vmb, vchunk))
+                vmb, vchunk, vsl = held.pop()   # newest held
+                out.append(Instr(release_op, vmb, vchunk, vsl))
+                released.add((vmb, vchunk, vsl))
             out.append(ins)
             held.append(key)
         else:  # B
             if key in released:
-                out.append(Instr(restore_op, ins.mb, ins.chunk))
+                out.append(Instr(restore_op, ins.mb, ins.chunk, ins.sl))
                 released.discard(key)
                 held.append(key)
             out.append(ins)

@@ -3,12 +3,19 @@ residency-aware slots and byte accounting (re-homed from
 ``pipeline.executor.ActivationStore``).
 
 Four slot classes per device:
-  local[i]    the device's own live residuals, keyed (mb, chunk)
+  local[i]    the device's own live residuals, keyed (mb, chunk, sl)
   foreign[i]  units accepted from the paired BPipe evictor,
-              keyed (owner_stage, mb, chunk)
+              keyed (owner_stage, mb, chunk, sl)
   host[i]     units offloaded to host memory (device bytes: zero)
   dropped[i]  units whose residuals were freed; only the retained
               boundary input remains (device bytes: ``retained_bytes``)
+
+``sl`` is the sequence slice (``ScheduleSpec.seq_chunks`` > 1 — 0 for
+unsliced schedules): a sliced unit is a first-class stash like any
+other, so every residency policy manages sliced KV with zero new
+mechanism. ``peek`` reads a unit's payload WHEREVER it lives — a later
+slice's forward must reach the retained-KV prefix even after a policy
+released the unit (docs/longcontext.md).
 
 Byte accounting uses a per-(owner_stage, chunk) weight — the same
 v-chunk weighting ``core.memory_model.act_bytes_per_stage`` charges
@@ -24,10 +31,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Tuple, Union
 
-Unit = Tuple[int, int]  # (mb, chunk) — one stash unit
+Unit = Tuple[int, int, int]  # (mb, chunk, sl) — one stash unit
 
 #: Per-unit byte weight: a flat float, or ``(owner_stage, chunk) -> bytes``
-#: for schedules whose units differ in size.
+#: for schedules whose units differ in size. Sliced schedules use a
+#: uniform per-slice weight (``memory_model.sliced_unit_bytes``), so the
+#: callable signature needs no slice argument.
 UnitBytes = Union[float, Callable[[int, int], float]]
 
 
@@ -59,7 +68,7 @@ class ActivationStore:
             else (lambda stage, chunk, w=float(unit_bytes): w)
         self.retained_bytes = retained_bytes
         self.local: List[Dict[Unit, Any]] = [dict() for _ in range(p)]
-        self.foreign: List[Dict[Tuple[int, int, int], Any]] = [
+        self.foreign: List[Dict[Tuple[int, int, int, int], Any]] = [
             dict() for _ in range(p)]
         self.host: List[Dict[Unit, Any]] = [dict() for _ in range(p)]
         self.dropped: List[Dict[Unit, Any]] = [dict() for _ in range(p)]
@@ -93,23 +102,47 @@ class ActivationStore:
         return len(self.local[i]) + len(self.foreign[i])
 
     # -- live residency ----------------------------------------------------
-    def put(self, i: int, mb: int, stash: Any, chunk: int = 0) -> None:
-        assert (mb, chunk) not in self.local[i], (i, mb, chunk)
-        self.local[i][(mb, chunk)] = stash
+    def put(self, i: int, mb: int, stash: Any, chunk: int = 0,
+            sl: int = 0) -> None:
+        assert (mb, chunk, sl) not in self.local[i], (i, mb, chunk, sl)
+        self.local[i][(mb, chunk, sl)] = stash
         self._add_bytes(i, self._w(i, chunk))
         self._bump(i)
 
-    def pop(self, i: int, mb: int, chunk: int = 0) -> Any:
-        stash = self.local[i].pop((mb, chunk))
+    def pop(self, i: int, mb: int, chunk: int = 0, sl: int = 0) -> Any:
+        stash = self.local[i].pop((mb, chunk, sl))
         self._add_bytes(i, -self._w(i, chunk))
         return stash
 
+    def peek(self, i: int, mb: int, chunk: int = 0, sl: int = 0) -> Any:
+        """Read a unit's payload wherever it currently lives — local,
+        shipped to a partner, host-offloaded, or residual-dropped —
+        without moving or re-accounting it. The sliced forward's
+        retained-KV reads go through this, so no residency policy can
+        deadlock a later slice by releasing an earlier one (reading a
+        host/partner-resident array costs a transfer the runtime
+        already overlaps; the bytes stay charged where the unit lives).
+        """
+        key = (mb, chunk, sl)
+        ent = self.local[i].get(key)
+        if ent is not None:
+            return ent
+        for j in range(self.p):
+            ent = self.foreign[j].get((i, mb, chunk, sl))
+            if ent is not None:
+                return ent
+        ent = self.host[i].get(key)
+        if ent is not None:
+            return ent
+        return self.dropped[i][key]
+
     # -- bpipe_swap: partner store ----------------------------------------
-    def evict(self, i: int, mb: int, partner: int, chunk: int = 0) -> Any:
-        """Ship (mb, chunk) to the paired acceptor; returns the moved
+    def evict(self, i: int, mb: int, partner: int, chunk: int = 0,
+              sl: int = 0) -> Any:
+        """Ship (mb, chunk, sl) to the paired acceptor; returns the moved
         stash (the in-flight payload the transfer runtime tracks)."""
-        stash = self.local[i].pop((mb, chunk))
-        self.foreign[partner][(i, mb, chunk)] = stash
+        stash = self.local[i].pop((mb, chunk, sl))
+        self.foreign[partner][(i, mb, chunk, sl)] = stash
         w = self._w(i, chunk)
         self.evictions += 1
         self.bytes_moved += w
@@ -118,9 +151,10 @@ class ActivationStore:
         self._bump(partner)
         return stash
 
-    def load(self, i: int, mb: int, partner: int, chunk: int = 0) -> Any:
-        stash = self.foreign[partner].pop((i, mb, chunk))
-        self.local[i][(mb, chunk)] = stash
+    def load(self, i: int, mb: int, partner: int, chunk: int = 0,
+             sl: int = 0) -> Any:
+        stash = self.foreign[partner].pop((i, mb, chunk, sl))
+        self.local[i][(mb, chunk, sl)] = stash
         w = self._w(i, chunk)
         self.loads += 1
         self.bytes_moved += w
@@ -130,10 +164,10 @@ class ActivationStore:
         return stash
 
     # -- host_offload: D2H / H2D ------------------------------------------
-    def offload(self, i: int, mb: int, chunk: int = 0,
+    def offload(self, i: int, mb: int, chunk: int = 0, sl: int = 0,
                 mover: Callable[[Any], Any] = lambda s: s) -> Any:
-        stash = mover(self.local[i].pop((mb, chunk)))
-        self.host[i][(mb, chunk)] = stash
+        stash = mover(self.local[i].pop((mb, chunk, sl)))
+        self.host[i][(mb, chunk, sl)] = stash
         w = self._w(i, chunk)
         self.offloads += 1
         self.bytes_moved += w
@@ -143,10 +177,10 @@ class ActivationStore:
                                       self.host_bytes[i])
         return stash
 
-    def fetch(self, i: int, mb: int, chunk: int = 0,
+    def fetch(self, i: int, mb: int, chunk: int = 0, sl: int = 0,
               mover: Callable[[Any], Any] = lambda s: s) -> Any:
-        stash = mover(self.host[i].pop((mb, chunk)))
-        self.local[i][(mb, chunk)] = stash
+        stash = mover(self.host[i].pop((mb, chunk, sl)))
+        self.local[i][(mb, chunk, sl)] = stash
         w = self._w(i, chunk)
         self.fetches += 1
         self.bytes_moved += w
@@ -156,22 +190,25 @@ class ActivationStore:
         return stash
 
     # -- selective_recompute: free residuals, keep the boundary input ------
-    def drop(self, i: int, mb: int, chunk: int = 0,
+    def drop(self, i: int, mb: int, chunk: int = 0, sl: int = 0,
              strip: Callable[[Any], Any] = lambda entry: None) -> None:
-        """Free (mb, chunk)'s residuals, keeping only ``strip(entry)``
-        (the boundary input the re-forward starts from)."""
-        entry = self.local[i].pop((mb, chunk))
-        self.dropped[i][(mb, chunk)] = strip(entry)
+        """Free (mb, chunk, sl)'s residuals, keeping only ``strip(entry)``
+        (the boundary input the re-forward starts from — plus the slice's
+        own KV under sequence slicing)."""
+        entry = self.local[i].pop((mb, chunk, sl))
+        self.dropped[i][(mb, chunk, sl)] = strip(entry)
         self.drops += 1
         self._add_bytes(i, -(self._w(i, chunk) - self.retained_bytes))
 
-    def dropped_input(self, i: int, mb: int, chunk: int = 0) -> Any:
-        return self.dropped[i][(mb, chunk)]
+    def dropped_input(self, i: int, mb: int, chunk: int = 0,
+                      sl: int = 0) -> Any:
+        return self.dropped[i][(mb, chunk, sl)]
 
-    def recompute(self, i: int, mb: int, stash: Any, chunk: int = 0) -> None:
+    def recompute(self, i: int, mb: int, stash: Any, chunk: int = 0,
+                  sl: int = 0) -> None:
         """Re-install the residuals ``stash`` rebuilt by the re-forward."""
-        del self.dropped[i][(mb, chunk)]
-        self.local[i][(mb, chunk)] = stash
+        del self.dropped[i][(mb, chunk, sl)]
+        self.local[i][(mb, chunk, sl)] = stash
         self.recomputes += 1
         self._add_bytes(i, self._w(i, chunk) - self.retained_bytes)
         self._bump(i)

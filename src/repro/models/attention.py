@@ -97,11 +97,11 @@ def _sdpa(q, k, v, cfg, q_pos, k_pos, *, causal, window):
     return out.reshape(b, sq, nq, hd)
 
 
-def _flash(q, k, v, cfg, *, causal, window):
+def _flash(q, k, v, cfg, *, causal, window, q_offset=0):
     from repro.kernels import ops  # lazy: kernels are optional at import
     return ops.flash_attention(
         q, k, v, causal=causal, window=window or 0,
-        softcap=cfg.attn_softcap, interpret=True)
+        softcap=cfg.attn_softcap, q_offset=q_offset, interpret=True)
 
 
 def attention(p, x, cfg, positions, *, kind, impl=None, causal=True):
@@ -122,6 +122,41 @@ def attention(p, x, cfg, positions, *, kind, impl=None, causal=True):
     dt = x.dtype
     out = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(dt))
     return out, (k, v)
+
+
+def attention_sliced(p, x, cfg, positions, kv_prefix, *, kind, impl=None):
+    """Self-attention for ONE sequence slice with a retained-KV prefix
+    (sequence-sliced schedules, docs/longcontext.md).
+
+    x: (b, L, d) — the slice's tokens, whose global positions are
+    ``positions`` (contiguous, starting at the prefix length).
+    kv_prefix: (k, v) of shape (b, P, nkv, hd) — post-RoPE keys/values of
+    ALL earlier slices (P = 0 for slice 0). The slice attends causally
+    over prefix + itself; since the prefix covers global positions
+    [0, P) and the slice [P, P+L), key positions are just arange(P+L).
+
+    Returns (out, (k_own, v_own)) — the slice's own post-RoPE KV, which
+    the executor retains for later slices' prefixes.
+    """
+    impl = impl or cfg.attn_impl
+    q = _project_q(p, x, cfg, positions)
+    k_own, v_own = _project_kv(p, x, cfg, positions)
+    pk, pv = kv_prefix
+    dt = x.dtype
+    k = jnp.concatenate([pk.astype(dt), k_own], axis=1)
+    v = jnp.concatenate([pv.astype(dt), v_own], axis=1)
+    window = cfg.window_size if kind == "local_attn" else 0
+    if impl == "flash":
+        out = _flash(q, k, v, cfg, causal=True, window=window,
+                     q_offset=int(pk.shape[1]))
+    else:
+        b, total_k = k.shape[0], k.shape[1]
+        k_pos = jnp.broadcast_to(
+            jnp.arange(total_k, dtype=jnp.int32)[None], (b, total_k))
+        out = _sdpa(q, k, v, cfg, positions, k_pos, causal=True,
+                    window=window)
+    out = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(dt))
+    return out, (k_own, v_own)
 
 
 def cross_attention(p, x, enc_states, cfg):

@@ -71,6 +71,43 @@ def _apply_mixer(p, x, cfg, kind, positions, *, causal, remat):
     return f(p, x)
 
 
+#: Mixer kinds that support sequence slicing (seq_chunks > 1): causal
+#: attention over a retained-KV prefix. Recurrent kinds (RGLRU, xLSTM)
+#: carry cross-sequence state a slice boundary would sever.
+SLICEABLE_KINDS = (ATTN, LOCAL)
+
+
+def apply_layer_sliced(p, x, cfg, kind, positions, kv_prefix, *,
+                       remat="none"):
+    """One layer over ONE sequence slice with a retained-KV prefix
+    (sequence-sliced schedules, docs/longcontext.md).
+
+    Returns (x, aux_loss, (k, v)) — the slice's own post-RoPE KV, which
+    the pipeline executor retains for later slices. Only attention
+    mixers (``SLICEABLE_KINDS``) can slice; cross-attention layers
+    cannot (the encoder states span the full sequence).
+    """
+    if kind not in SLICEABLE_KINDS:
+        raise ValueError(
+            f"seq_chunks > 1 needs attention mixers, got {kind!r}")
+    if "cross" in p:
+        raise ValueError("seq_chunks > 1 does not support cross-attention")
+
+    def mix(p_, x_, kvp):
+        return attn_mod.attention_sliced(p_, x_, cfg, positions, kvp,
+                                         kind=kind)
+
+    if remat == "attn":
+        mix = jax.checkpoint(mix)
+    aux = 0.0
+    h, kv = mix(p["mixer"], apply_norm(p["norm1"], x), kv_prefix)
+    x = x + h
+    if "ffn" in p:
+        h, aux = _apply_ffn(p["ffn"], apply_norm(p["norm2"], x), cfg)
+        x = x + h
+    return x, aux, kv
+
+
 def _apply_ffn(p, x, cfg):
     if cfg.moe is not None:
         return moe_mod.apply_moe(p, x, cfg)

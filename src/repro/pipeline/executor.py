@@ -31,6 +31,17 @@ routing key is (stage, mb, chunk), so the same handler set executes plain
 and interleaved streams. The dependency edges and partner map come
 precompiled on the Schedule — the executor re-derives nothing.
 
+Sequence-sliced schedules (``ScheduleSpec.seq_chunks`` = c > 1,
+docs/longcontext.md) split every microbatch into c sequence slices:
+each F runs one slice through ``make_sliced_stage_fn``, reading the
+retained-KV prefix of all earlier slices via ``store.peek`` (a slice's
+stash — vjp residuals plus its own post-RoPE KV — is just another store
+unit, so every residency policy manages sliced KV with zero new
+mechanism); each B runs in reverse slice order, accumulating the
+KV-prefix gradients it emits onto the earlier slices' pending
+cotangents in a single pass. At seq_chunks=1 the engine is bit-identical
+to the unsliced path (pinned by tests/test_differential.py).
+
 Compilation contract (tested): stage fns are built and jitted once in
 ``__init__`` and the microbatch is a ``jax.vjp`` *argument* — not a value
 closed over by a per-call lambda — so each virtual stage traces exactly
@@ -61,6 +72,7 @@ from repro.memory import policy as respol
 # The store is re-homed to repro.memory.store; re-exported here for
 # legacy importers of the executor module.
 from repro.memory.store import ActivationStore, StoreStats, Unit
+from repro.models import blocks as blocks_mod
 from repro.pipeline import stage as stage_mod
 from repro.transfer.channel import channel_key
 from repro.transfer.runtime import AsyncTransferRuntime
@@ -148,12 +160,25 @@ class PipelineExecutor:
         self.remat = remat
         self.enforce_cap = enforce_cap
         self.cap = spec.resolved_cap
+        self.c = spec.seq_chunks
         # One jitted fn per *virtual* stage, built once: jax.vjp over a
         # stable jitted callable reuses its trace, so repeated step()
         # calls (and every microbatch within a step) compile nothing new.
-        self.stage_fns = [
-            jax.jit(stage_mod.make_stage_fn(cfg, self.n_virtual, vs, remat))
-            for vs in range(self.n_virtual)]
+        # (Sliced stage fns retrace once per distinct kv-prefix length —
+        # c traces per virtual stage, still O(1) across steps.)
+        if self.c > 1:
+            bad = set(cfg.layer_kinds()) - set(blocks_mod.SLICEABLE_KINDS)
+            assert not bad, \
+                f"seq_chunks>1 needs attention mixers, got {sorted(bad)}"
+            self.stage_fns = [
+                jax.jit(stage_mod.make_sliced_stage_fn(
+                    cfg, self.n_virtual, vs, remat))
+                for vs in range(self.n_virtual)]
+        else:
+            self.stage_fns = [
+                jax.jit(stage_mod.make_stage_fn(
+                    cfg, self.n_virtual, vs, remat))
+                for vs in range(self.n_virtual)]
         self.splitter = stage_mod.StageSplitter(cfg, self.n_virtual)
         self.notation = notation
 
@@ -177,14 +202,27 @@ class PipelineExecutor:
         attention = {"none": "none", "attn": "recompute", "full": "recompute",
                      "flash": "flash"}.get(self.remat, "none")
         policy = self.spec.policy
+        c = self.c
+        sliced = c > 1
+        if sliced:
+            assert seq % c == 0, f"seq {seq} not divisible by seq_chunks {c}"
+        Ls = seq // c
         # One stash unit's bytes — the SAME v-chunk weighting
         # memory_model.act_bytes_per_stage charges, so executor-reported
         # peak_bytes/bytes_moved agree with the model's per-stage numbers
-        # (each interleaved unit holds 1/v of the device's layers).
-        unit_bytes = mm.act_bytes_per_stage(n, attention, self.v)
-        store = ActivationStore(
-            p, unit_bytes,
-            retained_bytes=policy.retained_bytes(n, attention, self.v))
+        # (each interleaved unit holds 1/v of the device's layers; a
+        # sliced unit 1/c of the stage stash plus its retained-KV prefix).
+        unit_bytes = mm.sliced_unit_bytes(n, attention, self.v, c)
+        retained = policy.retained_bytes(n, attention, self.v)
+        if sliced:
+            # a released slice retains 1/c of the policy's usual bytes
+            # plus its own KV (the DROP strip keeps (carry, kv_own) so
+            # later slices' forwards still reach the prefix) — mirrors
+            # memory_model.per_stage_memory
+            retained = retained / c
+            if policy.mechanism == "recompute":
+                retained += mm.kv_bytes_per_slice(n, self.v, c)
+        store = ActivationStore(p, unit_bytes, retained_bytes=retained)
         is_recompute = policy.mechanism == "recompute"
         swap_ops = frozenset(
             op for op, pol in {**respol.RELEASE_OPS,
@@ -216,16 +254,56 @@ class PipelineExecutor:
             {k: val[j * self.b:(j + 1) * self.b] for k, val in batch.items()}
             for j in range(m)]
 
-        # act_in/grad_in are keyed by the *virtual* stage they feed: the
-        # output of virtual stage vs routes to vs+1, which lives on device
+        # act_in/grad_in are keyed by the *virtual* stage they feed (plus
+        # the sequence slice — 0 for unsliced schedules): the output of
+        # virtual stage vs routes to vs+1, which lives on device
         # (vs+1) % p — possibly the same device, next chunk.
-        act_in: Dict[Tuple[int, int], Any] = {}
-        grad_in: Dict[Tuple[int, int], Any] = {}
-        losses: Dict[int, jnp.ndarray] = {}
+        act_in: Dict[Tuple[int, int, int], Any] = {}
+        grad_in: Dict[Tuple[int, int, int], Any] = {}
+        losses: Dict[Tuple[int, int], jnp.ndarray] = {}
         grads: List[Any] = [None] * nv
-        dummy = (jnp.zeros((self.b, seq, cfg.d_model), jnp.dtype(cfg.dtype)),
+        dummy = (jnp.zeros((self.b, Ls, cfg.d_model), jnp.dtype(cfg.dtype)),
                  jnp.zeros((), jnp.float32))
         scale = jnp.float32(1.0 / m)
+
+        if sliced:
+            # Per-(mb, slice) inputs: the slice's token window plus its
+            # global start position (the stage fn derives positions and
+            # the causal mask against the retained-KV prefix from it).
+            micros_sl = {
+                (j, s): {**{k: val[:, s * Ls:(s + 1) * Ls]
+                            for k, val in micros[j].items()},
+                         "offset": jnp.int32(s * Ls)}
+                for j in range(m) for s in range(c)}
+            # The sliced last stage returns UN-normalized nll sums; the
+            # whole-microbatch valid-token count normalizes them so the
+            # summed slice losses equal the unchunked stage loss.
+            cnt = [jnp.maximum(jnp.sum(
+                (micros[j]["labels"] >= 0).astype(jnp.float32)), 1.0)
+                for j in range(m)]
+            dt = jnp.dtype(cfg.dtype)
+            nkv, hd = cfg.num_kv_heads, cfg.head_dim
+            kv_zero = [tuple((jnp.zeros((self.b, 0, nkv, hd), dt),
+                              jnp.zeros((self.b, 0, nkv, hd), dt))
+                             for _ in self.splitter.assign[vs])
+                       for vs in range(nv)]
+            # (vs, mb, sl) -> pending dKV cotangent: prefix gradients the
+            # LATER slices' backwards (which run first — reverse slice
+            # order) have emitted for slice sl's own KV.
+            dkv_acc: Dict[Tuple[int, int, int], Any] = {}
+
+        def kv_prefix_for(i, vs, mb, chunk, sl):
+            """Concatenate earlier slices' retained KV (slice order =
+            global position order), reading through ``store.peek`` so
+            the prefix is reachable wherever a residency policy moved
+            the earlier units (partner store, host, dropped)."""
+            if sl == 0:
+                return kv_zero[vs]
+            parts = [store.peek(i, mb, chunk, j)[-1] for j in range(sl)]
+            return tuple(
+                (jnp.concatenate([part[li][0] for part in parts], axis=1),
+                 jnp.concatenate([part[li][1] for part in parts], axis=1))
+                for li in range(len(kv_zero[vs])))
 
         def wrap(body):
             """Shared post-instruction bookkeeping: trace-event capture
@@ -239,8 +317,9 @@ class PipelineExecutor:
                 if trace:
                     if sync is not None:
                         jax.block_until_ready(sync)
-                    op = ins.op + "+w" if getattr(ins, "is_wait", False) \
-                        else ins.op
+                    op = ins.op + (f".s{ins.sl}" if sliced else "")
+                    if getattr(ins, "is_wait", False):
+                        op += "+w"
                     events.append(TraceEvent(
                         i, op, ins.mb, ins.chunk,
                         t0 - t_step0, time.perf_counter() - t_step0))
@@ -260,36 +339,75 @@ class PipelineExecutor:
             # pop: the boundary activation has exactly one consumer;
             # holding it past this F would overhang the stash accounting
             # the cap is asserted on.
-            carry = dummy if vs == 0 else act_in.pop((vs, ins.mb), None)
+            carry = dummy if vs == 0 else act_in.pop((vs, ins.mb, ins.sl),
+                                                     None)
             if carry is None:
                 return P.BLOCKED
-            out, vjp_fn = jax.vjp(
-                self.stage_fns[vs], stage_params[vs], carry, micros[ins.mb])
-            # recompute residency keeps the boundary input alongside the
-            # residuals: DROP strips to it, RECOMPUTE re-forwards from it
+            if not sliced:
+                out, vjp_fn = jax.vjp(
+                    self.stage_fns[vs], stage_params[vs], carry,
+                    micros[ins.mb])
+                # recompute residency keeps the boundary input alongside
+                # the residuals: DROP strips to it, RECOMPUTE re-forwards
+                # from it
+                store.put(i, ins.mb,
+                          (vjp_fn, carry) if is_recompute else vjp_fn,
+                          ins.chunk)
+                if vs == nv - 1:
+                    losses[(ins.mb, 0)] = out
+                else:
+                    act_in[(vs + 1, ins.mb, 0)] = out
+                return out
+            sl = ins.sl
+            kv_prefix = kv_prefix_for(i, vs, ins.mb, ins.chunk, sl)
+            (primary, kv_own), vjp_fn = jax.vjp(
+                self.stage_fns[vs], stage_params[vs], carry, kv_prefix,
+                micros_sl[(ins.mb, sl)])
+            # the slice's own KV rides in the stash entry (last element)
+            # so later slices' forwards — and the residency machinery —
+            # see ONE unit, not a separate KV cache
             store.put(i, ins.mb,
-                      (vjp_fn, carry) if is_recompute else vjp_fn, ins.chunk)
+                      (vjp_fn, carry, kv_own) if is_recompute
+                      else (vjp_fn, kv_own), ins.chunk, sl)
             if vs == nv - 1:
-                losses[ins.mb] = out
+                nll_sum, aux = primary
+                losses[(ins.mb, sl)] = nll_sum / cnt[ins.mb] + aux
             else:
-                act_in[(vs + 1, ins.mb)] = out
-            return out
+                act_in[(vs + 1, ins.mb, sl)] = primary
+            return primary
 
         def on_b(i, ins):
             vs = ins.vs
             if vs == nv - 1:
-                cot = scale
+                cot = (scale / cnt[ins.mb], scale) if sliced else scale
             else:
-                cot = grad_in.pop((vs, ins.mb), None)
+                cot = grad_in.pop((vs, ins.mb, ins.sl), None)
                 if cot is None:
                     return P.BLOCKED
-            entry = store.pop(i, ins.mb, ins.chunk)
-            vjp_fn = entry[0] if is_recompute else entry
-            d_sp, d_carry, _ = vjp_fn(cot)
+            entry = store.pop(i, ins.mb, ins.chunk, ins.sl)
+            if not sliced:
+                vjp_fn = entry[0] if is_recompute else entry
+                d_sp, d_carry, _ = vjp_fn(cot)
+            else:
+                sl = ins.sl
+                vjp_fn, kv_own = entry[0], entry[-1]
+                # dKV for this slice's own KV: what LATER slices'
+                # backwards (already run — reverse slice order) emitted
+                cot_kv = dkv_acc.pop((vs, ins.mb, sl), None)
+                if cot_kv is None:       # newest slice: nothing pending
+                    cot_kv = jax.tree.map(jnp.zeros_like, kv_own)
+                d_sp, d_carry, d_kvp, _ = vjp_fn((cot, cot_kv))
+                for j in range(sl):      # scatter prefix grads backward
+                    seg = tuple((dk[:, j * Ls:(j + 1) * Ls],
+                                 dv[:, j * Ls:(j + 1) * Ls])
+                                for dk, dv in d_kvp)
+                    prev = dkv_acc.get((vs, ins.mb, j))
+                    dkv_acc[(vs, ins.mb, j)] = seg if prev is None \
+                        else jax.tree.map(jnp.add, prev, seg)
             grads[vs] = d_sp if grads[vs] is None else jax.tree.map(
                 jnp.add, grads[vs], d_sp)
             if vs > 0:
-                grad_in[(vs - 1, ins.mb)] = d_carry
+                grad_in[(vs - 1, ins.mb, ins.sl)] = d_carry
             return (d_sp, d_carry)
 
         # Every move handler follows the compiled ISSUE/WAIT contract:
@@ -303,14 +421,16 @@ class PipelineExecutor:
                 return xfers.wait(chan(ins.op, i), ins.done_key)
             return xfers.submit(
                 chan(ins.op, i), ins.done_key,
-                lambda: store.evict(i, ins.mb, partner[i], ins.chunk))
+                lambda: store.evict(i, ins.mb, partner[i], ins.chunk,
+                                    ins.sl))
 
         def on_load(i, ins):
             if ins.is_wait:
                 return xfers.wait(chan(ins.op, i), ins.done_key)
             return xfers.submit(
                 chan(ins.op, i), ins.done_key,
-                lambda: store.load(i, ins.mb, partner[i], ins.chunk))
+                lambda: store.load(i, ins.mb, partner[i], ins.chunk,
+                                   ins.sl))
 
         def on_offload(i, ins):
             if ins.is_wait:
@@ -319,7 +439,7 @@ class PipelineExecutor:
             # device_put moves the residual arrays to the host platform
             return xfers.submit(
                 chan(ins.op, i), ins.done_key,
-                lambda: store.offload(i, ins.mb, ins.chunk,
+                lambda: store.offload(i, ins.mb, ins.chunk, ins.sl,
                                       mover=mem_offload.to_host))
 
         def on_fetch(i, ins):
@@ -327,25 +447,38 @@ class PipelineExecutor:
                 return xfers.wait(chan(ins.op, i), ins.done_key)
             return xfers.submit(
                 chan(ins.op, i), ins.done_key,
-                lambda: store.fetch(i, ins.mb, ins.chunk,
+                lambda: store.fetch(i, ins.mb, ins.chunk, ins.sl,
                                     mover=mem_offload.to_device))
 
         def on_drop(i, ins):
             if ins.is_wait:
                 return None
             # free the residuals (the vjp closure reference), keep the
-            # boundary input the re-forward starts from
-            store.drop(i, ins.mb, ins.chunk, strip=lambda e: e[1])
+            # boundary input the re-forward starts from — plus, under
+            # slicing, the slice's own KV (later slices peek at it)
+            strip = (lambda e: (e[1], e[2])) if sliced else (lambda e: e[1])
+            store.drop(i, ins.mb, ins.chunk, ins.sl, strip=strip)
 
         def on_recompute(i, ins):
             if ins.is_wait:
                 return None
             vs = ins.vs
-            carry = store.dropped_input(i, ins.mb, ins.chunk)
-            out, vjp_fn = jax.vjp(
-                self.stage_fns[vs], stage_params[vs], carry, micros[ins.mb])
-            store.recompute(i, ins.mb, (vjp_fn, carry), ins.chunk)
-            return out
+            kept = store.dropped_input(i, ins.mb, ins.chunk, ins.sl)
+            if not sliced:
+                carry = kept
+                out, vjp_fn = jax.vjp(
+                    self.stage_fns[vs], stage_params[vs], carry,
+                    micros[ins.mb])
+                store.recompute(i, ins.mb, (vjp_fn, carry), ins.chunk)
+                return out
+            carry = kept[0]
+            kv_prefix = kv_prefix_for(i, vs, ins.mb, ins.chunk, ins.sl)
+            (primary, kv_own), vjp_fn = jax.vjp(
+                self.stage_fns[vs], stage_params[vs], carry, kv_prefix,
+                micros_sl[(ins.mb, ins.sl)])
+            store.recompute(i, ins.mb, (vjp_fn, carry, kv_own), ins.chunk,
+                            ins.sl)
+            return primary
 
         # Handlers by registered policy mechanism (like the simulator's
         # pricing set): a plugin policy's ops are executable without

@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.blocks import PatternStack, apply_layer
+from repro.models.blocks import (PatternStack, apply_layer,
+                                 apply_layer_sliced)
 from repro.models.layers import apply_norm, embed, unembed
 
 
@@ -138,5 +139,60 @@ def make_stage_fn(cfg: ModelConfig, p: int, stage: int, remat: str = "none"):
         nll = -jnp.take_along_axis(logp, lbl[..., None], axis=-1)[..., 0]
         loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
         return loss + aux
+
+    return fn
+
+
+def make_sliced_stage_fn(cfg: ModelConfig, p: int, stage: int,
+                         remat: str = "none"):
+    """Sequence-sliced stage forward (``ScheduleSpec.seq_chunks`` > 1,
+    docs/longcontext.md). Returns
+
+        f(sp, carry, kv_prefix, batch) -> (primary, kv_own)
+
+    where ``batch`` holds this slice's tokens/labels plus ``"offset"``
+    (the slice's global start position, an int32 scalar), ``kv_prefix``
+    is one (k, v) pair per local layer covering global positions
+    [0, offset) — zero-length for slice 0 — and ``kv_own`` is the
+    slice's own post-RoPE KV the executor retains for later slices.
+
+    ``primary`` is (activation, aux) on interior stages and
+    (nll_sum, aux) on the last stage — the nll sum is UN-normalized;
+    the executor divides by the microbatch's total valid-token count so
+    the summed slice losses equal the unchunked stage loss.
+    """
+    assign = layer_assignment(cfg, p)
+    kinds = cfg.layer_kinds()
+    layers = assign[stage]
+    first, last = stage == 0, stage == p - 1
+
+    def fn(sp, carry, kv_prefix, batch):
+        if first:
+            x = embed(sp["embed"], batch["tokens"], cfg)
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            x, aux = carry
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(
+            batch["offset"].astype(jnp.int32)
+            + jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        kv_own = []
+        for local, ℓ in enumerate(layers):
+            x, a, kv = apply_layer_sliced(
+                sp["layers"][local], x, cfg, kinds[ℓ], positions,
+                kv_prefix[local], remat=remat)
+            aux = aux + a
+            kv_own.append(kv)
+        kv_own = tuple(kv_own)
+        if not last:
+            return (x, aux), kv_own
+        x = apply_norm(sp["final_norm"], x)
+        logits = unembed(sp["unembed"], x, cfg)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        lbl = jnp.maximum(labels, 0)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, lbl[..., None], axis=-1)[..., 0]
+        return (jnp.sum(nll * mask), aux), kv_own
 
     return fn

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import re
 import statistics
 from typing import Dict, List, Optional
 
@@ -36,7 +37,9 @@ class CalibratedCosts:
     Tf/Tb are whole-device costs: interleaved traces time 1/v-sized chunk
     instructions, so the fit multiplies the chunk median back by v —
     matching ``SimConfig``'s convention (the simulator divides by v
-    again)."""
+    again). Sequence-sliced traces (``seq_chunks`` > 1) time 1/c-sized
+    slice instructions the same way, so the fit multiplies by c too;
+    EVICT/LOAD stay per-unit (a sliced unit IS the slice)."""
     Tf: float
     Tb: float
     t_evict: float = 0.0
@@ -44,6 +47,7 @@ class CalibratedCosts:
     v: int = 1
     b: int = 0              # micro batch the trace ran at (0 = unknown)
     samples: int = 0
+    seq_chunks: int = 1
 
     @property
     def t_move(self) -> float:
@@ -52,22 +56,30 @@ class CalibratedCosts:
         return statistics.mean(pair) if pair else 0.0
 
 
-def fit_trace(events, v: int = 1, b: int = 0) -> CalibratedCosts:
+_SLICE_RE = re.compile(r"\.s\d+")
+
+
+def fit_trace(events, v: int = 1, b: int = 0,
+              seq_chunks: int = 1) -> CalibratedCosts:
     """Fit simulator costs from executor ``TraceEvent``s (medians — robust
     to the odd scheduler hiccup; trace a warmed step, not the compile
-    step)."""
+    step). Sequence-sliced traces suffix ops with the slice
+    (``F.s0``, ``LOAD.s1+w``); the fit folds all slices of an op into
+    one list and multiplies the F/B medians back by ``seq_chunks``
+    (a slice is 1/c of the microbatch), mirroring the ``v`` convention."""
     by_op: Dict[str, List[float]] = {F: [], B: [], EVICT: [], LOAD: []}
     for e in events:
         # residency ops (OFFLOAD/FETCH/DROP/RECOMPUTE, plugin policies)
-        # are collected too — only F/B/EVICT/LOAD feed the fit
-        by_op.setdefault(e.op, []).append(e.duration)
+        # are collected too — only F/B/EVICT/LOAD feed the fit; WAIT
+        # halves keep their "+w" suffix and stay out of it
+        by_op.setdefault(_SLICE_RE.sub("", e.op), []).append(e.duration)
     assert by_op[F] and by_op[B], "trace has no F/B instructions"
     med = {op: (statistics.median(ds) if ds else 0.0)
            for op, ds in by_op.items()}
     return CalibratedCosts(
-        Tf=med[F] * v, Tb=med[B] * v,
+        Tf=med[F] * v * seq_chunks, Tb=med[B] * v * seq_chunks,
         t_evict=med[EVICT], t_load=med[LOAD],
-        v=v, b=b, samples=len(events))
+        v=v, b=b, samples=len(events), seq_chunks=seq_chunks)
 
 
 def apply(costs: CalibratedCosts, cfg: SIM.SimConfig) -> SIM.SimConfig:

@@ -210,7 +210,8 @@ def rank(n: Notation, cands: Iterable[Candidate], cost: CostModel,
         spec = cand.spec(n.p)
         res = SIM.simulate(SIM.SimConfig(
             spec=spec, Tf=T / 3.0, Tb=2.0 * T / 3.0,
-            evict_bytes=(mm.eviction_bytes(nb, cand.attention, spec.v)
+            evict_bytes=(mm.eviction_bytes(nb, cand.attention, spec.v,
+                                           spec.seq_chunks)
                          if spec.policy.moves_data else 0.0),
             pair_bw=link_bw, pair_hops=max(feas.pair_hops, 1),
             d2h_bw=host_bw, h2d_bw=host_bw))

@@ -13,9 +13,9 @@ from repro.core import schedule as sched
 from repro.core.notation import Notation
 from repro.planner.rank import RankedPlan, arms_of, recommend
 
-_COLS = ("#", "kind", "res", "v", "b", "m", "cap", "d", "attn", "peak_GiB",
-         "makespan_s", "MFU%", "eq3%", "req_gain", "got_gain", "moves",
-         "verdict")
+_COLS = ("#", "kind", "res", "v", "c", "b", "m", "cap", "d", "attn",
+         "peak_GiB", "makespan_s", "MFU%", "eq3%", "req_gain", "got_gain",
+         "moves", "verdict")
 
 
 def _managed(c) -> bool:
@@ -38,6 +38,9 @@ def _cell(p: RankedPlan, col: str, idx: int) -> str:
                                                      c.residency)
     if col == "v":
         return str(c.v) if c.kind in sched.INTERLEAVED else "-"
+    if col == "c":
+        # sequence slices per microbatch (docs/longcontext.md)
+        return str(c.seq_chunks) if c.seq_chunks != 1 else "-"
     if col == "b":
         return str(c.b)
     if col == "m":
@@ -91,7 +94,7 @@ def csv_rows(ranked: List[RankedPlan], tag: str, config: str) -> List[str]:
         c = p.cand
         out.append(
             f"{tag},{config},rank={i + 1},kind={c.kind},"
-            f"res={c.residency},v={c.v},b={c.b},"
+            f"res={c.residency},v={c.v},c={c.seq_chunks},b={c.b},"
             f"m={c.m},cap={c.cap if c.cap is not None else 'def'},"
             f"depth={c.depth},"
             f"attn={c.attention},peak_gib={p.feas.peak_gib:.2f},"
@@ -114,6 +117,8 @@ def recommendation_line(config: str, ranked: List[RankedPlan],
     bits = [c.kind, f"b={c.b}", f"m={c.m}"]
     if c.kind in sched.INTERLEAVED:
         bits.append(f"v={c.v}")
+    if c.seq_chunks != 1:
+        bits.append(f"c={c.seq_chunks}")
     if c.residency not in ("none", "bpipe_swap"):
         bits.append(f"res={c.residency}")
     if _managed(c):

@@ -52,16 +52,20 @@ class Candidate:
     attention: str = "recompute"
     residency: str = "none"
     depth: int = 1
+    seq_chunks: int = 1
 
     def spec(self, p: int) -> P.ScheduleSpec:
         """The candidate's schedule variant on a p-stage pipeline."""
         return P.ScheduleSpec(self.kind, p, self.m, v=self.v, cap=self.cap,
-                              residency=self.residency, depth=self.depth)
+                              residency=self.residency, depth=self.depth,
+                              seq_chunks=self.seq_chunks)
 
     def label(self) -> str:
         bits = [self.kind, f"b={self.b}", f"m={self.m}"]
         if self.kind in sched.INTERLEAVED:
             bits.append(f"v={self.v}")
+        if self.seq_chunks != 1:
+            bits.append(f"c={self.seq_chunks}")
         if self.residency not in ("none", "bpipe_swap"):
             bits.append(f"res={self.residency}")
         if self.cap is not None:
@@ -94,6 +98,13 @@ class SearchSpace:
     # (depth 1 = the serialized classic, listed first so ties between
     # equal-makespan depths resolve to the cheapest memory profile).
     depths: Tuple[int, ...] = (1, 2)
+    # Sequence slices per microbatch (SlimPipe direction,
+    # docs/longcontext.md). Opt-in: the default searches only the
+    # unsliced classic so the paper-condition verdicts (Table 3) are
+    # untouched; long-context sweeps pass e.g. (1, 2, 4). c > 1 applies
+    # only to kinds with a sliced builder (``ScheduleKind.sliced``) and
+    # to sequence lengths c divides; 1 first so ties resolve unsliced.
+    seq_chunkses: Tuple[int, ...] = (1,)
 
 
 def micro_batch_sizes(B: int, max_b: int = 0) -> List[int]:
@@ -122,18 +133,26 @@ def _cap_ladder(default: int, roof: int,
 
 
 def _caps_for(kind: str, p: int, v: int, deltas: Tuple[int, ...],
-              m: int) -> List[Optional[int]]:
+              m: int, seq_chunks: int = 1) -> List[Optional[int]]:
     # Anything at or above the plain-schedule peak never evicts — the
     # candidate degenerates to its non-BPipe twin, so clamp at the
     # kind's registered roof (stage-0 peak closed forms; see the
-    # ``ScheduleKind.cap_roof`` entries in core/schedule.py).
-    return _cap_ladder(sched.schedule_cap(kind, p, v),
-                       sched.SCHEDULES[kind].cap_roof(p, m, v), deltas)
+    # ``ScheduleKind.cap_roof`` entries in core/schedule.py). Sliced
+    # schedules count slice units: default and roof both widen by the
+    # extra warmup slices so the delta ladder stays centered.
+    extra = seq_chunks - 1
+    return _cap_ladder(sched.schedule_cap(kind, p, v,
+                                          seq_chunks=seq_chunks),
+                       sched.SCHEDULES[kind].cap_roof(p, m, v) + extra,
+                       deltas)
 
 
 def _residency_caps(pol: "respol.ResidencyPolicy", p: int, v: int,
-                    deltas: Tuple[int, ...], m: int) -> List[Optional[int]]:
-    return _cap_ladder(pol.default_cap(p, v), pol.cap_roof(p, m, v), deltas)
+                    deltas: Tuple[int, ...], m: int,
+                    seq_chunks: int = 1) -> List[Optional[int]]:
+    extra = seq_chunks - 1
+    return _cap_ladder(pol.default_cap(p, v) + extra,
+                       pol.cap_roof(p, m, v) + extra, deltas)
 
 
 def enumerate_candidates(n: Notation, space: SearchSpace = SearchSpace(),
@@ -157,31 +176,43 @@ def enumerate_candidates(n: Notation, space: SearchSpace = SearchSpace(),
                             continue
                     elif num_layers and p > num_layers:
                         continue
-                    if entry.balanced:
-                        # balanced kinds ARE the swap policy; the cap
-                        # ladder is theirs, and each cap opens the
-                        # overlap-depth ladder
-                        for cap in _caps_for(kind, p, v, space.cap_deltas,
-                                             m):
-                            for depth in space.depths:
-                                yield Candidate(kind=kind, b=b, m=m, v=v,
-                                                cap=cap,
-                                                attention=attention,
-                                                residency="bpipe_swap",
-                                                depth=depth)
-                        continue
-                    for residency in space.residencies:
-                        pol = respol.POLICIES.get(residency)
-                        assert pol is not None and not pol.swap, residency
-                        caps = (_residency_caps(pol, p, v, space.cap_deltas,
-                                                m)
-                                if pol.active else [None])
-                        # depth only matters when bytes move on a channel
-                        depths = space.depths if pol.moves_data else (1,)
-                        for cap in caps:
-                            for depth in depths:
-                                yield Candidate(kind=kind, b=b, m=m, v=v,
-                                                cap=cap,
-                                                attention=attention,
-                                                residency=residency,
-                                                depth=depth)
+                    # sequence slicing (seq_chunks > 1) applies only to
+                    # kinds with a sliced builder and to sequence
+                    # lengths the chunk count divides
+                    chunkses = [c for c in space.seq_chunkses
+                                if c == 1 or (entry.sliced
+                                              and n.s % c == 0)]
+                    for c in chunkses:
+                        if entry.balanced:
+                            # balanced kinds ARE the swap policy; the cap
+                            # ladder is theirs, and each cap opens the
+                            # overlap-depth ladder
+                            for cap in _caps_for(kind, p, v,
+                                                 space.cap_deltas, m, c):
+                                for depth in space.depths:
+                                    yield Candidate(kind=kind, b=b, m=m,
+                                                    v=v, cap=cap,
+                                                    attention=attention,
+                                                    residency="bpipe_swap",
+                                                    depth=depth,
+                                                    seq_chunks=c)
+                            continue
+                        for residency in space.residencies:
+                            pol = respol.POLICIES.get(residency)
+                            assert pol is not None and not pol.swap, \
+                                residency
+                            caps = (_residency_caps(pol, p, v,
+                                                    space.cap_deltas, m, c)
+                                    if pol.active else [None])
+                            # depth only matters when bytes move on a
+                            # channel
+                            depths = (space.depths if pol.moves_data
+                                      else (1,))
+                            for cap in caps:
+                                for depth in depths:
+                                    yield Candidate(kind=kind, b=b, m=m,
+                                                    v=v, cap=cap,
+                                                    attention=attention,
+                                                    residency=residency,
+                                                    depth=depth,
+                                                    seq_chunks=c)

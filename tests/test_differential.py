@@ -53,7 +53,8 @@ RESIDENCIES = ("none", "host_offload", "selective_recompute")
 # Spec strategy: every draw is a structurally valid ScheduleSpec
 # ---------------------------------------------------------------------------
 def build_spec(kind_i: int, p: int, m_mult: int, v: int, res_i: int,
-               cap_delta: int, depth: int) -> P.ScheduleSpec:
+               cap_delta: int, depth: int,
+               seq_chunks: int = 1) -> P.ScheduleSpec:
     kind = KINDS[kind_i % len(KINDS)]
     entry = S.SCHEDULES[kind]
     if entry.interleaved:
@@ -62,6 +63,8 @@ def build_spec(kind_i: int, p: int, m_mult: int, v: int, res_i: int,
     else:
         v = 1
         m = max(1, m_mult * 2)
+    if not entry.sliced:
+        seq_chunks = 1                # the spec would normalize anyway
     if entry.balanced:
         res = "none"                   # normalizes to bpipe_swap
         default, roof = entry.default_cap(p, v), entry.cap_roof(p, m, v)
@@ -72,11 +75,15 @@ def build_spec(kind_i: int, p: int, m_mult: int, v: int, res_i: int,
         roof = pol.cap_roof(p, m, v) if pol.active else None
     cap = None
     if default is not None and cap_delta:
+        # sliced defaults widen by the extra warmup slices; keep the
+        # delta centered there so -1 still bites
+        default += seq_chunks - 1
+        roof += seq_chunks - 1
         cap = min(max(default + cap_delta, 2), max(roof, 2))
         if cap == default:
             cap = None
     return P.ScheduleSpec(kind, p, m, v=v, cap=cap, residency=res,
-                          depth=depth)
+                          depth=depth, seq_chunks=seq_chunks)
 
 
 spec_strategy = st.tuples(
@@ -87,6 +94,7 @@ spec_strategy = st.tuples(
     st.integers(0, len(RESIDENCIES) - 1),
     st.integers(-1, 1),               # cap delta around the default
     st.integers(1, 3),                # overlap depth
+    st.sampled_from([1, 1, 2, 4]),    # seq_chunks (sliced kinds)
 ).map(lambda t: build_spec(*t))
 
 cost_strategy = st.floats(0.0, 4.0)   # evict_bytes (bandwidths fixed at 1)
@@ -130,6 +138,8 @@ def shrink_spec(spec: P.ScheduleSpec, fails) -> P.ScheduleSpec:
                 pass
         if s.v > 2 and s.interleaved:
             yield dataclasses.replace(s, v=s.v - 1)
+        if s.seq_chunks > 1:
+            yield dataclasses.replace(s, seq_chunks=s.seq_chunks // 2)
         if s.depth > 1:
             yield dataclasses.replace(s, depth=s.depth - 1)
         if s.cap is not None:
@@ -193,7 +203,9 @@ def test_simulator_bound_order_and_depth(spec, evict_bytes):
 
     def violates(s):
         r = _sim(s, evict_bytes)
-        ramp = (s.p - 1) / s.v
+        # interleaving shrinks the fill/drain ramp by v, slicing by c
+        # (per-slice F/B cost Tf/c, Tb/c) — v and c never both exceed 1
+        ramp = (s.p - 1) / (s.v * s.seq_chunks)
         ideal = (s.m + ramp) * 3.0        # (m + ramp)(Tf + Tb)
         if r.makespan < ideal - 1e-9:
             return "makespan below the ideal pipeline bound " \
@@ -263,11 +275,17 @@ def test_compiled_plan_self_consistency(spec):
 # ---------------------------------------------------------------------------
 def _exec_specs():
     """Structurally valid specs a 4-layer model can execute (p*v <= 4,
-    m=4): the full kind x residency x cap x depth cross section."""
+    m=4): the full kind x residency x cap x depth cross section, plus
+    the sequence-sliced variants (c divides the batch's seq=8; sliced
+    runs stay at the default cap — the cap ladder is already covered
+    unsliced and each extra executor spec is a jit compile)."""
     out = []
-    for kind, p, v in (("gpipe", 2, 1), ("1f1b", 4, 1), ("bpipe", 4, 1),
-                       ("1f1b_interleaved", 2, 2),
-                       ("bpipe_interleaved", 2, 2)):
+    for kind, p, v, c in (("gpipe", 2, 1, 1), ("1f1b", 4, 1, 1),
+                          ("bpipe", 4, 1, 1),
+                          ("1f1b_interleaved", 2, 2, 1),
+                          ("bpipe_interleaved", 2, 2, 1),
+                          ("gpipe", 2, 1, 2), ("1f1b", 4, 1, 2),
+                          ("bpipe", 4, 1, 2), ("1f1b", 2, 1, 4)):
         entry = S.SCHEDULES[kind]
         residencies = ("none",) if entry.balanced else RESIDENCIES
         for res in residencies:
@@ -278,13 +296,14 @@ def _exec_specs():
             elif pol.active:
                 default = pol.default_cap(p, v)
             for cap_delta in (0, -1):
-                if cap_delta and not managed:
+                if cap_delta and (not managed or c > 1):
                     continue
                 cap = None if not cap_delta else max(default + cap_delta, 2)
                 for depth in (1, 2):
                     try:
                         spec = P.ScheduleSpec(kind, p, 4, v=v, cap=cap,
-                                              residency=res, depth=depth)
+                                              residency=res, depth=depth,
+                                              seq_chunks=c)
                     except ValueError:
                         continue
                     if not _compiles(spec):
@@ -322,7 +341,8 @@ def _unmanaged_twin(spec: P.ScheduleSpec) -> P.ScheduleSpec:
     kind = {"bpipe": "1f1b",
             "bpipe_interleaved": "1f1b_interleaved"}.get(spec.kind,
                                                          spec.kind)
-    return P.ScheduleSpec(kind, spec.p, spec.m, v=spec.v)
+    return P.ScheduleSpec(kind, spec.p, spec.m, v=spec.v,
+                          seq_chunks=spec.seq_chunks)
 
 
 @given(st.sampled_from(_exec_specs()))
@@ -345,6 +365,29 @@ def test_executor_differential_vs_unmanaged(spec):
                                          "grads != unmanaged twin"))
 
 
+@given(st.sampled_from([s for s in _exec_specs() if s.seq_chunks > 1]))
+@settings(max_examples=min(FUZZ_EXEC_EXAMPLES, 4), deadline=None)
+def test_executor_sliced_parity_vs_unchunked(spec):
+    """A sliced schedule computes the SAME training step as its
+    unchunked twin — same loss, same grads — to fp32 tolerance (exact
+    bit-parity is not expected: slice-wise softmax/vjp re-associates
+    reductions)."""
+    import jax
+    import numpy as np
+    r, _ = _exec_step(spec)
+    twin = _unmanaged_twin(spec)
+    base, _ = _exec_step(P.ScheduleSpec(twin.kind, twin.p, twin.m,
+                                        v=twin.v))
+    assert abs(float(r.loss) - float(base.loss)) < 1e-5, \
+        _report(spec, "executor-sliced",
+                f"loss {float(r.loss)} != unchunked {float(base.loss)}")
+    for a, b in zip(jax.tree.leaves(r.grads), jax.tree.leaves(base.grads)):
+        if not np.allclose(np.asarray(a), np.asarray(b), rtol=1e-3,
+                           atol=1e-5):
+            raise AssertionError(_report(spec, "executor-sliced",
+                                         "grads drift vs unchunked twin"))
+
+
 @given(st.sampled_from(_exec_specs()))
 @settings(max_examples=FUZZ_EXEC_EXAMPLES, deadline=None)
 def test_executor_bytes_agree_with_memory_model(spec):
@@ -354,7 +397,7 @@ def test_executor_bytes_agree_with_memory_model(spec):
     n = Notation(a=cfg.num_heads, b=1, h=cfg.d_model, l=cfg.num_layers,
                  s=seq, v=cfg.vocab_size, B=4, p=spec.p, t=1)
     sch = P.compile_plan(spec)
-    unit = MM.act_bytes_per_stage(n, "none", spec.v)
+    unit = MM.sliced_unit_bytes(n, "none", spec.v, spec.seq_chunks)
     mems = MM.per_stage_memory(n, "none", spec)
     for i in range(spec.p):
         if r.stats.peak_local[i] > sch.peak_stash[i] + 1:

@@ -98,9 +98,9 @@ def test_compiled_accounting_peaks_and_spills(residency):
     # release waits on the unit's F; restore on its release
     rel, res = OPS[residency]
     r0 = next(x for x in sch.streams[0] if x.op == rel)
-    assert r0.dep == (F, 0, r0.mb, r0.chunk)
+    assert r0.dep == (F, 0, r0.mb, r0.chunk, 0)
     s0 = next(x for x in sch.streams[0] if x.op == res)
-    assert s0.dep == (rel, 0, s0.mb, s0.chunk)
+    assert s0.dep == (rel, 0, s0.mb, s0.chunk, 0)
     # moves = release + restore count of the stream actually built
     assert P.num_moves(spec) == sum(sch.num_evictions.values()) \
         + sum(sch.num_loads.values()) > 0
