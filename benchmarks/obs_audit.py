@@ -1,0 +1,111 @@
+"""Sim-vs-real divergence audit on the paper's two model shapes.
+
+Runs ``repro.obs.compare.audit`` end to end for gpt3-96b and llama-65b
+(reduced shapes — the audit runs the REAL executor, traced, then
+re-simulates the same ``ScheduleSpec`` under trace-fitted costs): the
+schedule the simulator priced and the schedule the runtime executed are
+aligned span-by-span. The rows quantify the paper's §4 premise — that
+the discrete-event model predicts the real pipeline — as three numbers
+per run: census match (identical instruction sets), per-op time skew
+(F/B share of the step, real vs simulated), and per-stage ordering
+divergence (normalized inversions of the dispatch order).
+
+Also publishes ``LAST_METRICS`` — bubble fraction, peak HBM bytes and
+channel occupancy folded from the real trace by ``repro.obs.metrics`` —
+which ``benchmarks/run.py`` copies into ``BENCH_smoke.json`` so CI runs
+leave a perf-trajectory data point per audit.
+
+Columns: config, kind, b, m, sim_n, real_n, census, time_scale,
+skew_F, skew_B, max_order_div, bubble_pct, peak_hbm_mib, chan_occ.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+#: Filled by ``main`` — per-config observability summary for the
+#: orchestrator's JSON report.
+LAST_METRICS: Optional[Dict[str, Dict[str, float]]] = None
+
+#: (config, kind, cap) audit arms; bpipe exercises the EVICT/LOAD
+#: channel spans, so the audit covers the transfer path too.
+CASES: Tuple[Tuple[str, str, int], ...] = (
+    ("gpt3-96b", "bpipe", 2),
+    ("llama-65b", "bpipe", 2),
+)
+
+
+def _audit_case(name: str, kind: str, cap: int, layers: int,
+                m: int, seq: int) -> Tuple[dict, Dict[str, float]]:
+    from repro.configs import get_config
+    from repro.core import plan as P
+    from repro.obs import compare, metrics
+    from repro.obs.events import Recorder
+    from repro.pipeline import executor as ex_mod
+
+    cfg = dataclasses.replace(get_config(name).reduced(),
+                              num_layers=layers, dtype="float32")
+    spec = P.ScheduleSpec(kind, 4, m, cap=cap)
+    rep = compare.audit(cfg, spec, micro_batch=1, seq=seq)
+    # Re-run the traced step once more for the metrics fold: audit()
+    # already proved the streams align, so one representative trace is
+    # enough for the summary numbers.
+    import jax
+    from repro.models import model as M
+    ex = ex_mod.PipelineExecutor(cfg, spec=spec, micro_batch=1)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (m, seq + 1),
+                              0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    ex.step(params, batch)
+    rec = Recorder()
+    ex.step(params, batch, trace=True, observer=rec)
+    met = metrics.compute(rec.spans, p=spec.p)
+    skews = {s.op: s.skew for s in rep.op_skew}
+    row = {
+        "config": name, "kind": kind, "b": 1, "m": m,
+        "sim_n": rep.sim_count, "real_n": rep.real_count,
+        "census": int(rep.instruction_sets_match),
+        "time_scale": rep.time_scale,
+        "skew_F": skews.get("F", 0.0), "skew_B": skews.get("B", 0.0),
+        "max_order_div": rep.max_order_divergence,
+        "bubble_pct": 100.0 * met.bubble_fraction,
+        "peak_hbm_mib": met.hbm_peak / 2**20,
+        "chan_occ": met.channel_occupancy(),
+    }
+    summary = {
+        "bubble_pct": row["bubble_pct"],
+        "peak_hbm_bytes": met.hbm_peak,
+        "channel_occupancy": row["chan_occ"],
+        "time_scale": rep.time_scale,
+        "max_order_divergence": rep.max_order_divergence,
+        "census_match": float(rep.instruction_sets_match),
+    }
+    return row, summary
+
+
+def main(print_csv=True, smoke=False):
+    global LAST_METRICS
+    layers, m, seq = (4, 8, 16) if smoke else (8, 8, 32)
+    rows: List[dict] = []
+    LAST_METRICS = {}
+    for name, kind, cap in CASES:
+        row, summary = _audit_case(name, kind, cap, layers, m, seq)
+        rows.append(row)
+        LAST_METRICS[name] = summary
+    if print_csv:
+        for r in rows:
+            print(f"obs_audit,{r['config']},kind={r['kind']},b={r['b']},"
+                  f"m={r['m']},sim_n={r['sim_n']},real_n={r['real_n']},"
+                  f"census={r['census']},"
+                  f"time_scale={r['time_scale']:.4g},"
+                  f"skew_F={r['skew_F']:.3f},skew_B={r['skew_B']:.3f},"
+                  f"max_order_div={r['max_order_div']:.3f},"
+                  f"bubble={r['bubble_pct']:.2f},"
+                  f"peak_hbm_mib={r['peak_hbm_mib']:.2f},"
+                  f"chan_occ={r['chan_occ']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

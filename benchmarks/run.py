@@ -14,6 +14,7 @@ Prints ``name,...`` CSV rows:
   roofline           per-(arch x shape) roofline terms from the dry-run
   planner_sweep      schedule auto-planner over every registered config
   longcontext_sweep  sequence-sliced planner verdicts at 32k/128k
+  obs_audit          sim-vs-real divergence audit on the paper shapes
 
 ``--smoke`` runs every benchmark on tiny CPU-only shapes (subset grids,
 the two smallest configs for the planner) so the whole suite doubles as
@@ -48,8 +49,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (estimator_accuracy, interleaved_sweep,
                             kernel_bench, longcontext_sweep, memory_balance,
-                            planner_sweep, residency_sweep, roofline_table,
-                            table3, table5)
+                            obs_audit, planner_sweep, residency_sweep,
+                            roofline_table, table3, table5)
     mods = {
         "table3": table3,
         "table5": table5,
@@ -61,6 +62,7 @@ def main(argv=None) -> None:
         "roofline": roofline_table,
         "planner_sweep": planner_sweep,
         "longcontext_sweep": longcontext_sweep,
+        "obs_audit": obs_audit,
     }
     if args.only:
         if args.only not in mods:
@@ -85,11 +87,18 @@ def main(argv=None) -> None:
             traceback.print_exc()
         out = buf.getvalue()
         sys.stdout.write(out)
-        results.append({
+        entry = {
             "benchmark": name, "status": status,
             "seconds": round(time.perf_counter() - t0, 4),
             "rows": [ln for ln in out.splitlines() if ln.strip()],
-        })
+        }
+        # Benchmarks that fold an observability summary (bubble%, peak
+        # HBM, channel occupancy — see benchmarks/obs_audit.py) publish
+        # it as LAST_METRICS; copy it into the JSON report.
+        metrics = getattr(mod, "LAST_METRICS", None)
+        if metrics is not None:
+            entry["metrics"] = metrics
+        results.append(entry)
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"smoke": args.smoke, "results": results}, f, indent=1)

@@ -30,6 +30,18 @@ if [ "$loops" != "src/repro/core/plan.py" ]; then
     exit 1
 fi
 
+# Observability guard: exactly ONE module constructs trace spans
+# (obs/events.py — engines emit through Observer.emit, exporters rebuild
+# through the factory helpers). A second "Span(" constructor means a
+# side-channel trace schema grew back — the drift the unified event
+# stream removed (docs/observability.md).
+spans=$(grep -rl --include='*.py' "Span(" src/repro)
+if [ "$spans" != "src/repro/obs/events.py" ]; then
+    echo "span-emission guard failed: expected only src/repro/obs/events.py," >&2
+    echo "found: $spans" >&2
+    exit 1
+fi
+
 # Differential schedule-fuzz harness, seeded + bounded: random valid
 # ScheduleSpecs must keep the executor bit-identical to unmanaged
 # execution, the simulator above the ideal bound / engine-order
@@ -75,9 +87,16 @@ PYEOF
 # GPT-3-recompute and lose LLaMA. (Captured first, then grepped:
 # `cli | grep -q` races — grep exits at the first match and SIGPIPEs
 # the still-printing CLI, which pipefail turns into a flaky failure.)
+# The winning plan's simulated timeline is exported alongside the
+# verdict (one event schema end to end — the same CLI answers "which
+# plan" and "what does its step look like"); CI uploads the trace on
+# failure so a red verdict arrives with its timeline attached.
 gpt3_out=$(PYTHONPATH=src python -m repro.launch.plan --config gpt3_96b \
-    --attention recompute --top 0)
+    --attention recompute --top 0 --perfetto plan_trace.perfetto.json \
+    --metrics-json plan_metrics.json)
 grep -q 'PLAN gpt3-96b \[recompute\]: bpipe' <<< "$gpt3_out"
+test -s plan_trace.perfetto.json
+test -s plan_metrics.json
 llama_out=$(PYTHONPATH=src python -m repro.launch.plan --config llama_65b \
     --top 0)
 grep -q 'PLAN llama-65b: 1f1b' <<< "$llama_out"

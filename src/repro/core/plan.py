@@ -557,7 +557,8 @@ Handler = Callable[[int, Any], Any]
 
 
 def run(streams: Mapping[int, Sequence[Any]],
-        handlers: Mapping[str, Handler], *, greedy: bool = True) -> int:
+        handlers: Mapping[str, Handler], *, greedy: bool = True,
+        observer: Optional[Any] = None) -> int:
     """The ready-instruction dispatch loop — the ONLY scheduling loop in
     the codebase. Simulator, executor, and stash accounting are handler
     sets over it.
@@ -570,6 +571,13 @@ def run(streams: Mapping[int, Sequence[Any]],
     per round — the deterministic round-robin merge the stash accounting
     counts over. A full round with no progress raises
     ``ScheduleDeadlock``. Returns the number of instructions dispatched.
+
+    ``observer`` (the ``repro.obs.events.Observer`` contract, duck-typed)
+    gets a ``dispatch(stage, ins)`` callback for every instruction the
+    loop retires, in engine order — the one seam every event stream
+    (simulator timelines, executor traces, dispatch-order audits) hangs
+    off. ``None`` (the default) is zero-cost: the loop body is exactly
+    the pre-instrumentation code path.
     """
     stages = sorted(streams)
     idx = {i: 0 for i in stages}
@@ -587,6 +595,8 @@ def run(streams: Mapping[int, Sequence[Any]],
                 remaining -= 1
                 done += 1
                 progressed = True
+                if observer is not None:
+                    observer.dispatch(i, ins)
                 if not greedy:
                     break
         if not progressed:

@@ -123,7 +123,8 @@ class SimResult:
                    default=0)
 
 
-def _simulate(cfg: SimConfig, greedy: bool = True) -> SimResult:
+def _simulate(cfg: SimConfig, greedy: bool = True,
+              observer=None) -> SimResult:
     spec = cfg.to_spec()
     schedule = P.compile_plan(spec)
     p, v = spec.p, spec.v
@@ -141,7 +142,8 @@ def _simulate(cfg: SimConfig, greedy: bool = True) -> SimResult:
     t_d2h = cfg.evict_bytes / cfg.d2h_bw if cfg.evict_bytes else 0.0
     t_h2d = cfg.evict_bytes / cfg.h2d_bw if cfg.evict_bytes else 0.0
     engine = TransferEngine(schedule, t_peer=t_move, t_d2h=t_d2h,
-                            t_h2d=t_h2d, depth=spec.depth)
+                            t_h2d=t_h2d, depth=spec.depth,
+                            observer=observer)
     # Restores are issued up to ``depth`` chunk-level F+B slots ahead of
     # the backward they feed (issue-early): deeper overlap starts the
     # transfer earlier and rides the channel queue instead of the stage.
@@ -156,6 +158,11 @@ def _simulate(cfg: SimConfig, greedy: bool = True) -> SimResult:
     def finish(i, ins, start_t, end_t):
         timeline[i].append((ins.op, ins.mb, ins.chunk, ins.sl,
                             start_t, end_t))
+        if observer is not None:
+            # the observer sees the full schema (phase included); the
+            # SimResult timeline keeps its pre-obs tuple shape untouched
+            observer.emit(ins.op, i, ins.mb, ins.chunk, ins.sl, ins.phase,
+                          start_t, end_t)
 
     def on_f(i, ins):
         if ins.dep is None:
@@ -190,13 +197,24 @@ def _simulate(cfg: SimConfig, greedy: bool = True) -> SimResult:
         t_stage[i] = end_t
         finish(i, ins, start_t, end_t)
 
+    def wait_span(i, ins):
+        # WAIT halves are free in simulated time (completion is already
+        # priced; the backward charges any residual stall), but they ARE
+        # instructions — the observer sees a zero-duration barrier span
+        # at the move's completion so sim and executor streams carry the
+        # same instruction set. Never appended to the SimResult timeline.
+        if observer is not None:
+            t = done.get(ins.dep, 0.0)
+            observer.emit(ins.op, i, ins.mb, ins.chunk, ins.sl, ins.phase,
+                          t, t)
+
     def on_release(i, ins):
         # ISSUE: the copy starts when the unit's F finished and the
         # channel admits it; async — the stage frontier is untouched.
         # WAIT halves are free here: completion is already priced, and
         # the restore's dep edge consumes it.
         if ins.is_wait:
-            return None
+            return wait_span(i, ins)
         pol = respol.RELEASE_OPS[ins.op]
         ready = done[ins.dep]
         if pol.mechanism == "recompute":
@@ -204,7 +222,7 @@ def _simulate(cfg: SimConfig, greedy: bool = True) -> SimResult:
             done[ins.done_key] = ready
             finish(i, ins, ready, ready)
             return None
-        start_t, end_t = engine.issue(pol, i, ready, release=True)
+        start_t, end_t = engine.issue(pol, i, ready, release=True, ins=ins)
         done[ins.done_key] = end_t
         state["move"] += end_t - start_t
         finish(i, ins, start_t, end_t)
@@ -215,7 +233,7 @@ def _simulate(cfg: SimConfig, greedy: bool = True) -> SimResult:
         # backward; the WAIT half is the completion barrier the backward
         # observes (charged there, as load-stall).
         if ins.is_wait:
-            return None
+            return wait_span(i, ins)
         pol = respol.RESTORE_OPS[ins.op]
         if pol.mechanism == "recompute":
             # re-run the chunk's forward ON the compute frontier: the
@@ -230,7 +248,7 @@ def _simulate(cfg: SimConfig, greedy: bool = True) -> SimResult:
             return None
         issue_t = max(0.0, t_stage[i] - window)
         ready = max(issue_t, done[ins.dep])
-        start_t, end_t = engine.issue(pol, i, ready, release=False)
+        start_t, end_t = engine.issue(pol, i, ready, release=False, ins=ins)
         done[ins.done_key] = end_t
         state["move"] += end_t - start_t
         finish(i, ins, start_t, end_t)
@@ -249,7 +267,7 @@ def _simulate(cfg: SimConfig, greedy: bool = True) -> SimResult:
     _stall_ops = tuple(op for op, pol in respol.RESTORE_OPS.items()
                        if pol.moves_data)
 
-    P.run(schedule.streams, handlers, greedy=greedy)
+    P.run(schedule.streams, handlers, greedy=greedy, observer=observer)
     makespan = max(max(t_stage.values()), state["last_b"])
     return SimResult(makespan=makespan,
                      busy=[busy[i] for i in range(p)],

@@ -84,6 +84,15 @@ def main(argv=None):
                     help="also print each arm's recommended plan as a "
                          "ScheduleSpec JSON line (hand it to the "
                          "executor/simulator via ScheduleSpec.from_dict)")
+    ap.add_argument("--perfetto", default="",
+                    help="write the recommended plan's simulated timeline "
+                         "as a Perfetto/Chrome trace JSON (stage tracks, "
+                         "channel tracks, HBM counter tracks — open in "
+                         "ui.perfetto.dev)")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the recommended plan's step metrics "
+                         "(bubble%%, stalls, channel occupancy, per-stage "
+                         "HBM peaks) as JSON")
     ap.add_argument("--trace", default="",
                     help="Chrome-trace JSON from executor step(trace=True); "
                          "calibrates Tf/Tb instead of Table5/analytic costs")
@@ -144,6 +153,55 @@ def main(argv=None):
         print(report.format_table(ranked, top=args.top))
     for line in report.summarize(cfg.name, n, ranked):
         print(line)
+    if args.perfetto or args.metrics_json:
+        import json
+
+        from repro.core import memory_model as mm
+        from repro.core import plan as plan_mod
+        from repro.core import simulator as SIM
+        from repro.obs import Recorder
+        from repro.obs import export as obs_export
+        from repro.obs import metrics as obs_metrics
+        from repro.planner.rank import recommend, sim_config_for
+        best = recommend(ranked, args.attention or None)
+        if best is None:
+            print("# nothing to export: no feasible plan", file=sys.stderr)
+        else:
+            # Re-simulate the winning plan with a recorder attached —
+            # the exact SimConfig rank priced it with — so the exported
+            # timeline/metrics describe the plan the CLI recommended.
+            rec = Recorder()
+            simcfg = sim_config_for(n, best, cost, LINKS[args.link],
+                                    args.host_bw * 1e9 if args.host_bw
+                                    else None)
+            res = SIM.simulate(simcfg, observer=rec)
+            spec = simcfg.spec
+            nb = n.replace(b=best.cand.b)
+            counters = obs_metrics.hbm_timeline(
+                rec.spans, plan_mod.compile_plan(spec).partner,
+                mm.sliced_unit_bytes(nb, best.cand.attention, spec.v,
+                                     spec.seq_chunks),
+                retained_bytes=spec.policy.retained_bytes(
+                    nb, best.cand.attention, spec.v),
+                p=spec.p)
+            if args.perfetto:
+                obs_export.save_trace(rec.spans, args.perfetto,
+                                      counters=counters)
+                print(f"# wrote Perfetto trace: {args.perfetto} "
+                      f"({len(rec.spans)} spans)")
+            if args.metrics_json:
+                met = obs_metrics.compute(
+                    rec.spans, p=spec.p,
+                    model_flops=cost.full_flops(n), t=n.t,
+                    peak_flops=cost.peak_per_chip,
+                    channel_stats=res.channels)
+                with open(args.metrics_json, "w") as f:
+                    json.dump({"config": cfg.name,
+                               "spec": spec.to_dict(),
+                               "metrics": met.to_dict(),
+                               "hbm_peaks": obs_metrics.hbm_peaks(counters)},
+                              f, indent=1)
+                print(f"# wrote metrics JSON: {args.metrics_json}")
     if args.spec_json:
         import json
         from repro.planner.rank import arms_of, recommend

@@ -101,6 +101,12 @@ class ActivationStore:
         """Device-resident full units (what the stash cap bounds)."""
         return len(self.local[i]) + len(self.foreign[i])
 
+    def resident_bytes(self, i: int) -> float:
+        """Current device-resident activation bytes on stage ``i`` — the
+        live sample the executor attaches to each span (``Span.hbm``) so
+        observed traces carry a real memory counter track."""
+        return self.cur_bytes[i]
+
     # -- live residency ----------------------------------------------------
     def put(self, i: int, mb: int, stash: Any, chunk: int = 0,
             sl: int = 0) -> None:

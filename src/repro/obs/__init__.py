@@ -1,0 +1,21 @@
+"""repro.obs — one event stream out of ``plan.run``.
+
+Structured observability for every engine that dispatches a compiled
+schedule (docs/observability.md):
+
+  * ``events``   — the canonical ``Span`` schema, the ``Observer``
+                   contract, and ``Recorder`` (the ONLY module that
+                   constructs trace spans — scripts/check.sh enforces it)
+  * ``timeline`` — the ordered per-stage / per-channel view
+  * ``metrics``  — bubble fractions, stalls, channel occupancy, MFU,
+                   HBM-residency timelines
+  * ``export``   — the unified Perfetto/Chrome exporter (lossless
+                   round trip)
+  * ``compare``  — sim-vs-real divergence audits
+"""
+from repro.obs.events import (CHANNEL, COMPUTE, ISSUE, WAIT, Observer,
+                              Recorder, Span)
+from repro.obs.timeline import Timeline
+
+__all__ = ["CHANNEL", "COMPUTE", "ISSUE", "WAIT", "Observer", "Recorder",
+           "Span", "Timeline"]

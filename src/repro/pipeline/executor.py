@@ -73,29 +73,10 @@ from repro.memory import policy as respol
 # legacy importers of the executor module.
 from repro.memory.store import ActivationStore, StoreStats, Unit
 from repro.models import blocks as blocks_mod
+from repro.obs.events import Observer, Recorder, Span
 from repro.pipeline import stage as stage_mod
 from repro.transfer.channel import channel_key
 from repro.transfer.runtime import AsyncTransferRuntime
-
-
-@dataclasses.dataclass(frozen=True)
-class TraceEvent:
-    """One executed instruction with wall-clock bounds (seconds, relative
-    to the step start). F/B durations are real device time (the executor
-    blocks on the instruction's outputs while tracing); EVICT/LOAD on a
-    single host are bookkeeping, so their durations record only the
-    store-move overhead. ``planner.calibrate`` fits simulator costs from
-    these and exports them in Chrome trace format."""
-    stage: int
-    op: str                      # WAIT halves trace as "<OP>+w" so the
-    mb: int                      # per-op medians calibrate fits stay on
-    chunk: int                   # the canonical move events
-    start: float
-    end: float
-
-    @property
-    def duration(self) -> float:
-        return self.end - self.start
 
 
 @dataclasses.dataclass
@@ -103,7 +84,12 @@ class StepResult:
     loss: jnp.ndarray
     grads: Any
     stats: StoreStats
-    events: Optional[List[TraceEvent]] = None
+    # Canonical-schema spans (repro.obs.events.Span) of the traced step,
+    # wall-clock seconds relative to step start: stage instructions
+    # (WAIT halves carry phase="wait") plus channel-occupancy spans from
+    # the transfer runtime, each stage span sampling the store's live
+    # resident bytes (Span.hbm). None unless step(trace=True).
+    events: Optional[List[Span]] = None
 
 
 class PipelineExecutor:
@@ -189,7 +175,8 @@ class PipelineExecutor:
                 f"batch implies m={m} but spec binds m={self.spec.m}"
         return P.compile_plan(self.spec.with_m(m))
 
-    def step(self, params, batch, trace: bool = False) -> StepResult:
+    def step(self, params, batch, trace: bool = False,
+             observer: Optional[Observer] = None) -> StepResult:
         cfg, p = self.cfg, self.p
         nv = self.n_virtual
         bsz = batch["tokens"].shape[0]
@@ -232,21 +219,33 @@ class PipelineExecutor:
         schedule = self._schedule_for(m)
         bounds = schedule.bounds
         partner = schedule.partner
+        # trace=True attaches a Recorder when the caller brought no
+        # observer of their own; with observer=None and trace=False the
+        # step is the exact pre-instrumentation code path (zero-cost —
+        # no timing, no blocking, no span construction).
+        recorder: Optional[Recorder] = None
+        if trace and observer is None:
+            observer = recorder = Recorder()
+        elif trace:
+            assert isinstance(observer, Recorder), \
+                "trace=True needs a Recorder observer to collect events"
+            recorder = observer
+        t_step0 = time.perf_counter()
+        clock = lambda: time.perf_counter() - t_step0  # noqa: E731
         # In-flight transfer tracking with the spec's overlap-depth cap:
         # real copies (device_put and store moves) are async, so the
         # runtime is what makes the live HBM bound hold — at most
         # ``depth`` moves may be outstanding per channel before the
         # oldest is retired (blocked on). Same channel vocabulary the
-        # simulator prices (docs/transfer.md).
-        xfers = AsyncTransferRuntime(self.spec.depth)
+        # simulator prices (docs/transfer.md) — and the same observer:
+        # each real copy retires as a channel-track span.
+        xfers = AsyncTransferRuntime(self.spec.depth, observer=observer,
+                                     clock=clock)
 
         def chan(op: str, i: int) -> Optional[tuple]:
             pol = respol.RELEASE_OPS.get(op) or respol.RESTORE_OPS[op]
             return channel_key(pol.mechanism, i, partner.get(i),
                                release=op in respol.RELEASE_OPS)
-
-        events: Optional[List[TraceEvent]] = [] if trace else None
-        t_step0 = time.perf_counter()
 
         # Slice each microbatch once, not once per (chunk, F) — interleaving
         # visits every microbatch p*v times on this hot path.
@@ -306,23 +305,22 @@ class PipelineExecutor:
                 for li in range(len(kv_zero[vs])))
 
         def wrap(body):
-            """Shared post-instruction bookkeeping: trace-event capture
-            (blocking so the event spans real device time, not async
-            dispatch) and the live stash-cap assertion."""
+            """Shared post-instruction bookkeeping: span emission through
+            the attached observer (blocking so the span covers real
+            device time, not async dispatch) and the live stash-cap
+            assertion."""
             def handler(i, ins):
-                t0 = time.perf_counter() if trace else 0.0
+                t0 = time.perf_counter() if observer is not None else 0.0
                 sync = body(i, ins)
                 if sync is P.BLOCKED:
                     return P.BLOCKED
-                if trace:
+                if observer is not None:
                     if sync is not None:
                         jax.block_until_ready(sync)
-                    op = ins.op + (f".s{ins.sl}" if sliced else "")
-                    if getattr(ins, "is_wait", False):
-                        op += "+w"
-                    events.append(TraceEvent(
-                        i, op, ins.mb, ins.chunk,
-                        t0 - t_step0, time.perf_counter() - t_step0))
+                    observer.emit(
+                        ins.op, i, ins.mb, ins.chunk, ins.sl, ins.phase,
+                        t0 - t_step0, time.perf_counter() - t_step0,
+                        hbm=store.resident_bytes(i))
                 if self.enforce_cap and self.cap is not None:
                     # swap ops (EVICT/LOAD) also touch the partner's
                     # store — check both ends so acceptor-side transients
@@ -492,7 +490,7 @@ class PipelineExecutor:
             handlers[op] = wrap(mech_release[pol.mechanism])
         for op, pol in respol.RESTORE_OPS.items():
             handlers[op] = wrap(mech_restore[pol.mechanism])
-        P.run(schedule.streams, handlers)
+        P.run(schedule.streams, handlers, observer=observer)
         xfers.drain()                       # no copy escapes the step
 
         loss = sum(losses.values()) * scale
@@ -500,4 +498,5 @@ class PipelineExecutor:
         stats = store.stats()
         stats.transfers_inflight_peak = xfers.inflight_peak
         return StepResult(loss=loss, grads=full_grads, stats=stats,
-                          events=events)
+                          events=list(recorder.spans)
+                          if recorder is not None else None)

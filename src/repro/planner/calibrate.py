@@ -17,7 +17,6 @@ round-trip back for offline fitting.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 import statistics
 from typing import Dict, List, Optional
@@ -27,6 +26,7 @@ from repro.core import schedule
 from repro.core import simulator as SIM
 from repro.core.notation import Notation
 from repro.core.schedule import B, EVICT, F, LOAD
+from repro.obs import export as _export
 from repro.planner.rank import AnalyticCostModel, CostModel
 
 
@@ -61,25 +61,35 @@ _SLICE_RE = re.compile(r"\.s\d+")
 
 def fit_trace(events, v: int = 1, b: int = 0,
               seq_chunks: int = 1) -> CalibratedCosts:
-    """Fit simulator costs from executor ``TraceEvent``s (medians — robust
-    to the odd scheduler hiccup; trace a warmed step, not the compile
-    step). Sequence-sliced traces suffix ops with the slice
-    (``F.s0``, ``LOAD.s1+w``); the fit folds all slices of an op into
-    one list and multiplies the F/B medians back by ``seq_chunks``
-    (a slice is 1/c of the microbatch), mirroring the ``v`` convention."""
+    """Fit simulator costs from an executor event stream — canonical
+    ``repro.obs.events.Span``s (``step(trace=True)`` or a reloaded
+    trace; medians — robust to the odd scheduler hiccup; trace a warmed
+    step, not the compile step). All slices of an op fold into one list
+    and the F/B medians multiply back by ``seq_chunks`` (a slice is 1/c
+    of the microbatch), mirroring the ``v`` convention. WAIT halves
+    (``Span.phase``) and channel-occupancy spans are completion/queue
+    bookkeeping, not instruction costs — they bin separately and stay
+    out of the fit. Legacy string-suffixed ops (``F.s0``, ``LOAD+w``)
+    from pre-obs traces still bin correctly."""
     by_op: Dict[str, List[float]] = {F: [], B: [], EVICT: [], LOAD: []}
+    n = 0
     for e in events:
+        n += 1
+        if getattr(e, "track", "compute") == "channel":
+            continue
         # residency ops (OFFLOAD/FETCH/DROP/RECOMPUTE, plugin policies)
-        # are collected too — only F/B/EVICT/LOAD feed the fit; WAIT
-        # halves keep their "+w" suffix and stay out of it
-        by_op.setdefault(_SLICE_RE.sub("", e.op), []).append(e.duration)
+        # are collected too — only F/B/EVICT/LOAD feed the fit
+        op = _SLICE_RE.sub("", e.op)
+        if getattr(e, "phase", "") == "wait" and not op.endswith("+w"):
+            op += "+w"
+        by_op.setdefault(op, []).append(e.duration)
     assert by_op[F] and by_op[B], "trace has no F/B instructions"
     med = {op: (statistics.median(ds) if ds else 0.0)
            for op, ds in by_op.items()}
     return CalibratedCosts(
         Tf=med[F] * v * seq_chunks, Tb=med[B] * v * seq_chunks,
         t_evict=med[EVICT], t_load=med[LOAD],
-        v=v, b=b, samples=len(events), seq_chunks=seq_chunks)
+        v=v, b=b, samples=n, seq_chunks=seq_chunks)
 
 
 def apply(costs: CalibratedCosts, cfg: SIM.SimConfig) -> SIM.SimConfig:
@@ -141,43 +151,16 @@ class TraceCostModel(CostModel):
 
 
 # ---------------------------------------------------------------------------
-# Chrome trace round trip
+# Chrome trace round trip — aliases into the unified exporter
 # ---------------------------------------------------------------------------
-def chrome_trace(events) -> dict:
-    """Chrome trace format (complete 'X' events, microsecond timestamps);
-    one tid per pipeline stage."""
-    out = []
-    for e in events:
-        out.append({
-            "name": f"{e.op}{e.mb}" + (f".c{e.chunk}" if e.chunk else ""),
-            "cat": e.op, "ph": "X",
-            "ts": e.start * 1e6, "dur": e.duration * 1e6,
-            "pid": 0, "tid": e.stage,
-            "args": {"mb": e.mb, "chunk": e.chunk},
-        })
-    return {"traceEvents": out, "displayTimeUnit": "ms"}
-
-
-def save_chrome_trace(events, path: str) -> None:
-    with open(path, "w") as f:
-        json.dump(chrome_trace(events), f)
-
-
-def load_chrome_trace(path: str):
-    """Parse a saved Chrome trace back into ``TraceEvent``s."""
-    from repro.pipeline.executor import TraceEvent
-    with open(path) as f:
-        doc = json.load(f)
-    events = []
-    for rec in doc["traceEvents"]:
-        if rec.get("ph") != "X":
-            continue
-        start = rec["ts"] / 1e6
-        events.append(TraceEvent(
-            stage=int(rec["tid"]), op=rec["cat"],
-            mb=int(rec["args"]["mb"]), chunk=int(rec["args"]["chunk"]),
-            start=start, end=start + rec["dur"] / 1e6))
-    return events
+# The ad-hoc serializer that used to live here (which dropped the
+# WAIT-half ``+w`` and slice ``.sN`` distinctions on reload, mis-binning
+# move medians on replayed calibrations) is replaced by ``repro.obs.
+# export``: structured args round-trip every span field losslessly, and
+# the loader still parses old-format traces by suffix.
+chrome_trace = _export.to_chrome
+save_chrome_trace = _export.save_trace
+load_chrome_trace = _export.load_trace
 
 
 # ---------------------------------------------------------------------------

@@ -155,12 +155,34 @@ def _required_gain(n: Notation, cand: Candidate, base: Candidate,
             / _bubble_term(n, base.b, base.kind, 1)) * (1.0 + overhead)
 
 
+def sim_config_for(n: Notation, rp: "RankedPlan", cost: CostModel,
+                   link_bw: float = NVLINK_BW,
+                   host_bw: Optional[float] = None) -> SIM.SimConfig:
+    """The exact ``SimConfig`` ``rank`` prices a candidate with —
+    exposed so the CLI can re-simulate a recommended plan with an
+    observer attached (Perfetto export, metrics JSON) without
+    re-deriving any knob."""
+    cand = rp.cand
+    nb = n.replace(b=cand.b)
+    T = cost.stage_T(nb, cand.attention)
+    spec = cand.spec(n.p)
+    hb = host_bw if host_bw is not None else PCIE_BW
+    return SIM.SimConfig(
+        spec=spec, Tf=T / 3.0, Tb=2.0 * T / 3.0,
+        evict_bytes=(mm.eviction_bytes(nb, cand.attention, spec.v,
+                                       spec.seq_chunks)
+                     if spec.policy.moves_data else 0.0),
+        pair_bw=link_bw, pair_hops=max(rp.feas.pair_hops, 1),
+        d2h_bw=hb, h2d_bw=hb)
+
+
 @dataclasses.dataclass
 class RankedPlan:
     cand: Candidate
     feas: feasibility.Feasibility
     stage_T: float = 0.0
     makespan: float = 0.0
+    bubble: float = 0.0         # simulated bubble fraction (idle share)
     load_stall: float = 0.0
     move_time: float = 0.0      # summed residency-op time (tie-breaker)
     mfu: float = 0.0            # simulator-derived (fraction)
@@ -206,18 +228,14 @@ def rank(n: Notation, cands: Iterable[Candidate], cost: CostModel,
             plans.append(rp)
             continue
         nb = n.replace(b=cand.b)
-        T = cost.stage_T(nb, cand.attention)
         spec = cand.spec(n.p)
-        res = SIM.simulate(SIM.SimConfig(
-            spec=spec, Tf=T / 3.0, Tb=2.0 * T / 3.0,
-            evict_bytes=(mm.eviction_bytes(nb, cand.attention, spec.v,
-                                           spec.seq_chunks)
-                         if spec.policy.moves_data else 0.0),
-            pair_bw=link_bw, pair_hops=max(feas.pair_hops, 1),
-            d2h_bw=host_bw, h2d_bw=host_bw))
+        simcfg = sim_config_for(n, rp, cost, link_bw, host_bw)
+        T = simcfg.Tf + simcfg.Tb
+        res = SIM.simulate(simcfg)
         F = cost.full_flops(n)
         rp.stage_T = T
         rp.makespan = res.makespan
+        rp.bubble = res.bubble_fraction
         rp.load_stall = res.load_stall
         rp.move_time = res.move_time
         # Traffic accounting from the stream actually built (cap- and

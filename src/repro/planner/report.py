@@ -14,8 +14,8 @@ from repro.core.notation import Notation
 from repro.planner.rank import RankedPlan, arms_of, recommend
 
 _COLS = ("#", "kind", "res", "v", "c", "b", "m", "cap", "d", "attn",
-         "peak_GiB", "makespan_s", "MFU%", "eq3%", "req_gain", "got_gain",
-         "moves", "verdict")
+         "peak_GiB", "makespan_s", "MFU%", "bubble%", "stall", "eq3%",
+         "req_gain", "got_gain", "moves", "verdict")
 
 
 def _managed(c) -> bool:
@@ -61,6 +61,13 @@ def _cell(p: RankedPlan, col: str, idx: int) -> str:
         return f"{p.makespan:.4g}" if p.makespan else "-"
     if col == "MFU%":
         return f"{100 * p.mfu:.1f}" if p.mfu else "-"
+    if col == "bubble%":
+        # simulated idle share (repro.obs.metrics vocabulary): what the
+        # paper's eq. 2 bubble penalty actually costs this candidate
+        return f"{100 * p.bubble:.1f}" if p.makespan else "-"
+    if col == "stall":
+        # summed backward time spent waiting on in-flight restores
+        return f"{p.load_stall:.3g}" if p.makespan else "-"
     if col == "eq3%":
         return f"{100 * p.mfu_eq3:.1f}" if p.mfu_eq3 else "-"
     if col == "req_gain":
@@ -98,7 +105,8 @@ def csv_rows(ranked: List[RankedPlan], tag: str, config: str) -> List[str]:
             f"m={c.m},cap={c.cap if c.cap is not None else 'def'},"
             f"depth={c.depth},"
             f"attn={c.attention},peak_gib={p.feas.peak_gib:.2f},"
-            f"mfu={100 * p.mfu:.2f},req_gain={p.required_gain:.3f},"
+            f"mfu={100 * p.mfu:.2f},bubble={100 * p.bubble:.2f},"
+            f"stall={p.load_stall:.4g},req_gain={p.required_gain:.3f},"
             f"got_gain={p.achieved_gain:.3f},moves={p.moves},"
             f"traffic_gib={p.traffic_bytes / 2**30:.2f},"
             f"verdict={p.verdict}")

@@ -57,6 +57,7 @@ class ChannelStats:
     moves: int = 0           # transfers issued
     busy: float = 0.0        # summed transfer (link-occupancy) time
     queue_peak: int = 0      # max transfers in flight at one instant
+    stall: float = 0.0       # summed data-ready-but-link-busy wait
 
     def utilization(self, makespan: float) -> float:
         return self.busy / makespan if makespan > 0 else 0.0
@@ -98,6 +99,7 @@ class Channel:
 
     def issue(self, ready: float) -> Tuple[float, float]:
         """Price one transfer: returns ``(start, end)``."""
+        data_ready = ready
         # bounded admission: wait for a free in-flight slot (no effect
         # on start/end — see the class docstring — only on occupancy)
         if len(self._ends) >= self.depth:
@@ -115,6 +117,7 @@ class Channel:
         st = self.stats
         st.moves += 1
         st.busy += self.t_move
+        st.stall += start - data_ready
         st.queue_peak = max(st.queue_peak, pending)
         self.free = end
         return start, end

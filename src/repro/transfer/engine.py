@@ -33,11 +33,14 @@ class TransferEngine:
     on real copies."""
 
     def __init__(self, schedule, *, t_peer: float = 0.0, t_d2h: float = 0.0,
-                 t_h2d: float = 0.0, depth: int = 1):
+                 t_h2d: float = 0.0, depth: int = 1, observer=None):
         self.schedule = schedule
         self.depth = max(1, int(depth))
         self._t = {PEER: t_peer, D2H: t_d2h, H2D: t_h2d}
         self.channels: Dict[ChannelKey, Channel] = {}
+        # duck-typed repro.obs Observer: every priced move additionally
+        # emits a channel-track span (enqueue -> dequeue) when attached
+        self.observer = observer
 
     def key_for(self, pol: ResidencyPolicy, stage: int,
                 release: bool) -> Optional[ChannelKey]:
@@ -56,14 +59,21 @@ class TransferEngine:
         return ch
 
     def issue(self, pol: ResidencyPolicy, stage: int, ready: float,
-              release: bool) -> Tuple[float, float]:
+              release: bool, ins=None) -> Tuple[float, float]:
         """Issue one move on the policy's channel; returns ``(start,
         end)``. A channel-less mechanism (recompute's DROP) completes
-        instantly at ``ready`` — its restore bill is the caller's."""
+        instantly at ``ready`` — its restore bill is the caller's.
+        ``ins`` (the issuing ``PlannedInstr``) lets an attached observer
+        label the channel-occupancy span it emits per move."""
         ch = self.channel_for(pol, stage, release)
         if ch is None:
             return ready, ready
-        return ch.issue(ready)
+        start, end = ch.issue(ready)
+        if self.observer is not None and ins is not None:
+            self.observer.emit(ins.op, stage, ins.mb, ins.chunk, ins.sl,
+                               ins.phase, start, end, track="channel",
+                               channel=ch.key)
+        return start, end
 
     def stats(self) -> Dict[ChannelKey, ChannelStats]:
         return {key: ch.stats for key, ch in self.channels.items()}

@@ -32,14 +32,23 @@ def _block(payload: Any) -> Any:
 
 
 class AsyncTransferRuntime:
-    """Bounded-depth in-flight tracking over real async copies."""
+    """Bounded-depth in-flight tracking over real async copies.
 
-    def __init__(self, depth: int = 1):
+    ``observer`` (the duck-typed ``repro.obs`` contract) plus ``clock``
+    (a zero-arg step-relative timer) turn every real move into a
+    channel-track span — submit time to retire (block) time, the same
+    occupancy interval the simulator's ``Channel`` prices — keyed by the
+    move's unit key (``PlannedInstr.done_key``: (op, stage, mb, chunk,
+    sl))."""
+
+    def __init__(self, depth: int = 1, observer=None, clock=None):
         self.depth = max(1, int(depth))
-        self._q: Dict[ChannelKey, Deque[Tuple[Hashable, Any]]] = {}
+        self._q: Dict[ChannelKey, Deque[Tuple[Hashable, Any, float]]] = {}
         self.submitted = 0
         self.retired = 0
         self.inflight_peak = 0       # max in-flight on any one channel
+        self.observer = observer
+        self.clock = clock if clock is not None else (lambda: 0.0)
 
     def submit(self, key: Optional[ChannelKey], unit: Hashable,
                launch: Any) -> Any:
@@ -55,9 +64,9 @@ class AsyncTransferRuntime:
             return launch()
         q = self._q.setdefault(key, collections.deque())
         while len(q) >= self.depth:   # depth cap: reserve the slot first
-            self._retire(q.popleft())
+            self._retire(key, q.popleft())
         payload = launch()
-        q.append((unit, payload))
+        q.append((unit, payload, self.clock()))
         self.submitted += 1
         self.inflight_peak = max(self.inflight_peak, len(q))
         return payload
@@ -71,20 +80,27 @@ class AsyncTransferRuntime:
         if key is None:
             return
         q = self._q.get(key)
-        if not q or not any(u == unit for u, _ in q):
+        if not q or not any(u == unit for u, _, _ in q):
             return
         while q:
-            u, payload = q.popleft()
-            self._retire((u, payload))
-            if u == unit:
+            item = q.popleft()
+            self._retire(key, item)
+            if item[0] == unit:
                 break
 
     def drain(self) -> None:
         """Retire every in-flight move (step barrier)."""
-        for q in self._q.values():
+        for key, q in self._q.items():
             while q:
-                self._retire(q.popleft())
+                self._retire(key, q.popleft())
 
-    def _retire(self, item: Tuple[Hashable, Any]) -> None:
-        _block(item[1])
+    def _retire(self, key: ChannelKey,
+                item: Tuple[Hashable, Any, float]) -> None:
+        unit, payload, t_submit = item
+        _block(payload)
         self.retired += 1
+        if self.observer is not None:
+            op, stage, mb, chunk, sl = unit
+            self.observer.emit(op, stage, mb, chunk, sl, "",
+                               t_submit, self.clock(), track="channel",
+                               channel=key)

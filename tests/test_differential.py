@@ -415,3 +415,32 @@ def test_executor_bytes_agree_with_memory_model(spec):
             f"bytes_moved {r.stats.bytes_moved} != model {want}"))
     assert r.stats.transfers_inflight_peak <= spec.depth, \
         _report(spec, "memory", "in-flight transfers exceed the depth cap")
+
+
+@given(st.sampled_from(_exec_specs()))
+@settings(max_examples=min(FUZZ_EXEC_EXAMPLES, 4), deadline=None)
+def test_executor_and_simulator_emit_same_instruction_set(spec):
+    """Observability census invariant (docs/observability.md): the
+    simulator's and the real executor's event streams for the SAME spec
+    contain the same instruction set — every key the model prices is
+    executed and vice versa (timing and dispatch order may differ;
+    ``obs.compare`` quantifies those separately)."""
+    from repro.obs.events import Recorder
+    key = (spec, "events")
+    if key not in _EXEC_CACHE:
+        from repro.pipeline import PipelineExecutor
+        _exec_step(spec)                  # ensures the shared setup
+        cfg, params, batch, _ = _EXEC_CACHE["setup"]
+        ex = PipelineExecutor(cfg, spec=spec, micro_batch=1)
+        _EXEC_CACHE[key] = ex.step(params, batch, trace=True).events
+    real_keys = {s.key for s in _EXEC_CACHE[key] if s.track == "compute"}
+    rec = Recorder()
+    SIM.simulate(SIM.SimConfig(spec=spec, Tf=1.0, Tb=2.0, evict_bytes=1.0,
+                               pair_bw=1.0, d2h_bw=1.0, h2d_bw=1.0),
+                 observer=rec)
+    if rec.keys() != real_keys:
+        diff = sorted(rec.keys() ^ real_keys)
+        raise AssertionError(_report(
+            spec, "observability",
+            f"sim/executor instruction sets differ on {len(diff)} keys: "
+            f"{diff[:6]}"))

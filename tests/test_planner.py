@@ -221,7 +221,8 @@ def test_trace_calibration_changes_simulator_costs(tmp_path):
     m = 8
     n_fb = sum(1 for e in events if e.op in (S.F, S.B))
     assert n_fb == 2 * 4 * m
-    assert sum(1 for e in events if e.op == S.EVICT) == res.stats.evictions
+    assert sum(1 for e in events
+               if e.op == S.EVICT and e.canonical) == res.stats.evictions
     assert all(e.end >= e.start >= 0.0 for e in events)
 
     fit = calibrate.fit_trace(events, v=1, b=1)

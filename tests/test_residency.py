@@ -432,12 +432,12 @@ def test_custom_policy_registers_end_to_end(exec_setup):
 
 
 def test_fit_trace_tolerates_residency_ops():
-    from repro.pipeline.executor import TraceEvent
+    from repro.obs import events as OE
     from repro.planner import calibrate
-    events = [TraceEvent(0, F, 0, 0, 0.0, 1.0),
-              TraceEvent(0, OFFLOAD, 0, 0, 1.0, 1.5),
-              TraceEvent(0, RECOMPUTE, 0, 0, 1.5, 2.0),
-              TraceEvent(0, B, 0, 0, 2.0, 4.0)]
+    events = [OE.make(F, 0, 0, start=0.0, end=1.0),
+              OE.make(OFFLOAD, 0, 0, start=1.0, end=1.5),
+              OE.make(RECOMPUTE, 0, 0, start=1.5, end=2.0),
+              OE.make(B, 0, 0, start=2.0, end=4.0)]
     fit = calibrate.fit_trace(events)
     assert (fit.Tf, fit.Tb) == (1.0, 2.0) and fit.samples == 4
 

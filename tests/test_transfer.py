@@ -412,11 +412,15 @@ def test_executor_trace_separates_wait_halves(exec_setup):
     ex = PipelineExecutor(cfg, spec=P.ScheduleSpec("bpipe", 4, 8),
                           micro_batch=1)
     r = ex.step(params, batch, trace=True)
-    ops = {e.op for e in r.events}
-    assert EVICT in ops and f"{EVICT}+w" in ops
-    # canonical move counts stay one-per-transfer (calibrate contract)
-    assert sum(1 for e in r.events if e.op == EVICT) == r.stats.evictions
-    assert sum(1 for e in r.events if e.op == LOAD) == r.stats.loads
+    ev = [e for e in r.events if e.op == EVICT and e.track == "compute"]
+    assert {e.phase for e in ev} == {"issue", "wait"}
+    # canonical move counts stay one-per-transfer (calibrate contract);
+    # WAIT halves and channel-occupancy spans ride along separately
+    assert sum(1 for e in ev if e.canonical) == r.stats.evictions
+    assert sum(1 for e in r.events
+               if e.op == LOAD and e.canonical) == r.stats.loads
+    assert sum(1 for e in r.events if e.op == EVICT
+               and e.track == "channel") == r.stats.evictions
 
 
 # ---------------------------------------------------------------------------
