@@ -2,8 +2,15 @@
 config (the paper's two models + the 11 assigned architectures) and
 print the winning plan per attention arm.
 
-Columns: config, arm, kind, v, b, m, cap, peak_GiB, mfu, n_feasible,
-n_rejected (break-even), n_oom — or best=none when nothing fits.
+Columns: config, arm, kind, v, b, m, cap, peak_GiB, mfu, plan_time_s,
+n_enumerated, n_simulated, n_feasible, n_rejected (break-even),
+n_pruned (branch-and-bound), n_oom — or best=none when nothing fits.
+The per-config wall time and search counters also land in the module's
+``LAST_METRICS`` (benchmarks/run.py copies it into the JSON report), so
+CI runs leave a planner-speed trajectory. ``exhaustive=True`` disables
+the branch-and-bound pruning — the before/after baseline; smoke runs
+time it automatically (``plan_time_s_exhaustive`` in the metrics), so
+``BENCH_smoke.json`` records both sides of the speedup.
 
 ``--smoke`` (via benchmarks/run.py) plans only the two smallest configs
 at a toy shape, exercising the full enumerate -> prune -> rank path in
@@ -11,10 +18,17 @@ seconds on CPU.
 """
 from __future__ import annotations
 
+import time
+
 from repro.configs import get_config, list_configs
+from repro.core import plan as plan_mod
 from repro.core.notation import A100_HBM_BYTES, from_model
 from repro.planner import SearchSpace, plan_config, recommend
 from repro.planner.rank import arms_of
+
+#: Search statistics of the last ``main`` run: per-config plan_time_s +
+#: verdict counts, and the sweep totals (benchmarks/run.py JSON report).
+LAST_METRICS = None
 
 
 def _pow2_at_most(x: int) -> int:
@@ -24,7 +38,7 @@ def _pow2_at_most(x: int) -> int:
     return p
 
 
-def plan_one(name: str, smoke: bool = False):
+def plan_one(name: str, smoke: bool = False, exhaustive: bool = False):
     cfg = get_config(name)
     if smoke:
         p = min(4, _pow2_at_most(cfg.num_layers))
@@ -36,7 +50,8 @@ def plan_one(name: str, smoke: bool = False):
         n = from_model(cfg, b=1, s=2048, B=128, p=p, t=4)
         hbm = A100_HBM_BYTES
         search = SearchSpace()
-    return n, plan_config(n, cfg, hbm, search=search)
+    return n, plan_config(n, cfg, hbm, search=search,
+                          exhaustive=exhaustive)
 
 
 def smallest_configs(k: int = 2):
@@ -44,16 +59,25 @@ def smallest_configs(k: int = 2):
                   key=lambda c: get_config(c).param_count())[:k]
 
 
-def main(print_csv=True, smoke=False):
+def main(print_csv=True, smoke=False, exhaustive=False):
+    global LAST_METRICS
     names = smallest_configs(2) if smoke else list_configs()
     rows = []
+    per_config = []
     for name in names:
-        n, ranked = plan_one(name, smoke)
+        t0 = time.perf_counter()
+        n, ranked = plan_one(name, smoke, exhaustive)
+        plan_time = time.perf_counter() - t0
         counts = {
+            "enumerated": len(ranked),
+            "simulated": sum(1 for p in ranked if p.makespan > 0),
             "feasible": sum(1 for p in ranked if p.ok),
             "rejected": sum(1 for p in ranked if p.verdict == "reject"),
+            "pruned": sum(1 for p in ranked if p.verdict == "pruned"),
             "oom": sum(1 for p in ranked if p.verdict == "infeasible"),
         }
+        per_config.append({"config": name, "plan_time_s": round(plan_time, 4),
+                           **counts})
         for arm in arms_of(ranked) + [None]:
             best = recommend(ranked, arm)
             tag = arm or "overall"
@@ -70,8 +94,30 @@ def main(print_csv=True, smoke=False):
                       f"cap={c.cap if c.cap is not None else 'def'},"
                       f"peak_gib={best.feas.peak_gib:.1f},"
                       f"mfu={100 * best.mfu:.1f},"
+                      f"plan_time_s={plan_time:.3f},"
+                      f"enumerated={counts['enumerated']},"
+                      f"simulated={counts['simulated']},"
                       f"feasible={counts['feasible']},"
-                      f"rejected={counts['rejected']},oom={counts['oom']}")
+                      f"rejected={counts['rejected']},"
+                      f"pruned={counts['pruned']},oom={counts['oom']}")
+    LAST_METRICS = {
+        "exhaustive": exhaustive,
+        "plan_time_s": round(sum(c["plan_time_s"] for c in per_config), 4),
+        "enumerated": sum(c["enumerated"] for c in per_config),
+        "simulated": sum(c["simulated"] for c in per_config),
+        "pruned": sum(c["pruned"] for c in per_config),
+        "configs": per_config,
+    }
+    if smoke and not exhaustive:
+        # Before/after datapoint for the JSON report: time the same smoke
+        # configs with pruning disabled. Cold-start both sides — the
+        # pruned pass above began with an empty compile cache too.
+        plan_mod.compile_plan.cache_clear()
+        t0 = time.perf_counter()
+        for name in names:
+            plan_one(name, smoke, exhaustive=True)
+        LAST_METRICS["plan_time_s_exhaustive"] = round(
+            time.perf_counter() - t0, 4)
     return rows
 
 

@@ -23,7 +23,7 @@ python -m compileall -q src benchmarks examples tests
 # Architecture guard: exactly ONE ready-instruction dispatch loop exists
 # (plan.run). A second "while remaining" loop means a module grew its own
 # scheduler again — the regression the compiled-plan refactor removed.
-loops=$(grep -rl "while remaining" src/repro)
+loops=$(grep -rl --include='*.py' "while remaining" src/repro)
 if [ "$loops" != "src/repro/core/plan.py" ]; then
     echo "ready-loop guard failed: expected only src/repro/core/plan.py," >&2
     echo "found: $loops" >&2
@@ -101,6 +101,30 @@ llama_out=$(PYTHONPATH=src python -m repro.launch.plan --config llama_65b \
     --top 0)
 grep -q 'PLAN llama-65b: 1f1b' <<< "$llama_out"
 
+# Planner-speed gate: the branch-and-bound search must keep the FULL
+# 13-config sweep fast (the perf_opt this repo ships — see
+# docs/planner.md "Search performance"). Budget is generous vs the ~7s
+# measured so slow CI boxes pass, but a pruning regression that falls
+# back to exhaustive-scale work (~42s at HEAD before the B&B search)
+# fails loudly. Counters print alongside so a red run says what the
+# search did.
+speed_budget="${REPRO_PLANNER_SWEEP_BUDGET_S:-25}"
+PYTHONPATH=src python - "$speed_budget" <<'PYEOF'
+import sys, time
+from benchmarks import planner_sweep
+budget = float(sys.argv[1])
+t0 = time.perf_counter()
+planner_sweep.main(print_csv=False, smoke=False)
+dt = time.perf_counter() - t0
+m = planner_sweep.LAST_METRICS
+print(f"planner sweep: {dt:.2f}s over 13 configs — "
+      f"{m['enumerated']} enumerated, {m['simulated']} simulated, "
+      f"{m['pruned']} pruned (budget {budget:.0f}s)")
+assert dt <= budget, (
+    f"planner sweep took {dt:.2f}s > {budget:.0f}s budget — "
+    f"branch-and-bound pruning regressed?")
+PYEOF
+
 # Tier-1 with a per-test wall-clock budget: --durations surfaces the
 # slowest tests and the awk grep fails the run if any single test
 # exceeds the budget — a silent 10x slowdown in one test is a
@@ -124,5 +148,6 @@ awk -v budget="$budget" '
 ' "$durations_log"
 rm -f "$durations_log"
 slow_rc=0
-python -m pytest -q -m "slow" "$@" || slow_rc=$?
+python -m pytest -q -m "slow" --ignore=tests/test_differential.py "$@" \
+    || slow_rc=$?
 [ "$slow_rc" -eq 0 ] || [ "$slow_rc" -eq 5 ]

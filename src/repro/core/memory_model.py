@@ -114,7 +114,8 @@ class StageMemory:
 
 def per_stage_memory(n: Notation, attention: str, kind: KindOrSpec,
                      cfg: ModelConfig = None, v: int = 1,
-                     cap: int = None) -> List[StageMemory]:
+                     cap: int = None, template: bool = False
+                     ) -> List[StageMemory]:
     """Peak memory per pipeline stage under the given schedule variant
     (a ``ScheduleSpec``, or the legacy kind/v/cap knobs). Stash-unit
     counts come from the compiled plan's peak accounting; for interleaved
@@ -130,9 +131,16 @@ def per_stage_memory(n: Notation, attention: str, kind: KindOrSpec,
     overlap with memory: a data-moving policy at depth d may hold up to
     d in-flight restore transients per stage instead of the single one
     the cap already budgets, so stages that restore over a link are
-    charged ``(d - 1)`` extra units."""
+    charged ``(d - 1)`` extra units.
+
+    ``template=True`` compiles the spec's saturation template
+    (``plan.peak_template_spec``) instead of the full stream when the
+    kind's peak accounting is m-independent past the warmup ramp
+    (``ScheduleKind.peak_saturates``) — identical peaks at a fraction of
+    the compile cost; the planner's feasibility pass uses it. Byte
+    weights are always the real spec's (they never read m)."""
     spec = _as_spec(kind, n, v, cap)
-    sch = P.compile_plan(spec)
+    sch = P.compile_plan(P.peak_template_spec(spec) if template else spec)
     peaks = sch.peak_stash
     spilled = sch.peak_spilled
     pol = spec.policy
@@ -163,9 +171,10 @@ def per_stage_memory(n: Notation, attention: str, kind: KindOrSpec,
 
 def max_stage_bytes(n: Notation, attention: str, kind: KindOrSpec,
                     cfg: ModelConfig = None, v: int = 1,
-                    cap: int = None) -> float:
+                    cap: int = None, template: bool = False) -> float:
     return max(s.total
-               for s in per_stage_memory(n, attention, kind, cfg, v, cap))
+               for s in per_stage_memory(n, attention, kind, cfg, v, cap,
+                                         template=template))
 
 
 def fits(n: Notation, attention: str, kind: KindOrSpec, device_bytes: float,

@@ -30,7 +30,7 @@ simulable, and executable with no interpreter edits. See docs/api.md.
 from __future__ import annotations
 
 import dataclasses
-import functools
+import heapq
 from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
                     Tuple)
 
@@ -476,11 +476,97 @@ def partner_map(p: int) -> Dict[int, int]:
     return out
 
 
-@functools.lru_cache(maxsize=256)
+#: Bounded LRU over compiled plans. A dict (insertion-ordered) rather
+#: than ``functools.lru_cache`` so the planner can read hit/miss/bind
+#: counters (``compile_cache_stats`` / ``launch.plan --verbose``) and so
+#: depth re-binds share one structural compilation (see below).
+_COMPILE_CACHE: Dict[ScheduleSpec, Schedule] = {}
+_COMPILE_CACHE_MAX = 256
+_COMPILE_STATS = {"hits": 0, "misses": 0, "evictions": 0, "binds": 0}
+
+
 def compile_plan(spec: ScheduleSpec) -> Schedule:
-    """Compile ``spec`` into a ``Schedule``. Cached on the spec — the
-    planner's feasibility pass, the simulator, and the executor all share
-    one compilation per variant."""
+    """Compile ``spec`` into a ``Schedule``. Cached on the spec (bounded
+    LRU) — the planner's feasibility pass, the simulator, and the
+    executor all share one compilation per variant.
+
+    ``depth`` is a *pricing* dimension: it changes what the simulator
+    charges and what the executor keeps in flight, never the compiled
+    streams or peak accounting. Specs that differ only in depth
+    therefore share one structural compilation — the depth-1 artifact is
+    compiled once and re-bound (``dataclasses.replace`` of the spec
+    field) per depth, so a planner depth ladder costs one compile."""
+    cached = _COMPILE_CACHE.get(spec)
+    if cached is not None:
+        _COMPILE_STATS["hits"] += 1
+        # move-to-back = most recently used (dicts iterate in insertion
+        # order, so the front is the eviction victim)
+        _COMPILE_CACHE.pop(spec)
+        _COMPILE_CACHE[spec] = cached
+        return cached
+    _COMPILE_STATS["misses"] += 1
+    if spec.depth != 1:
+        base = compile_plan(dataclasses.replace(spec, depth=1))
+        _COMPILE_STATS["binds"] += 1
+        sch = dataclasses.replace(base, spec=spec)
+    else:
+        sch = _compile(spec)
+    _COMPILE_CACHE[spec] = sch
+    while len(_COMPILE_CACHE) > _COMPILE_CACHE_MAX:
+        _COMPILE_CACHE.pop(next(iter(_COMPILE_CACHE)))
+        _COMPILE_STATS["evictions"] += 1
+    return sch
+
+
+def _compile_cache_clear() -> None:
+    _COMPILE_CACHE.clear()
+
+
+compile_plan.cache_clear = _compile_cache_clear
+
+
+def compile_cache_stats(reset: bool = False) -> Dict[str, int]:
+    """Compile-cache counters: ``hits``/``misses`` (cache lookups),
+    ``binds`` (misses served by re-binding a cached depth-1 structural
+    template instead of compiling), ``evictions``, and the current
+    ``size``/``maxsize``. ``reset=True`` zeroes the counters after
+    reading (the cache itself is untouched)."""
+    out = dict(_COMPILE_STATS, size=len(_COMPILE_CACHE),
+               maxsize=_COMPILE_CACHE_MAX)
+    if reset:
+        for k in _COMPILE_STATS:
+            _COMPILE_STATS[k] = 0
+    return out
+
+
+#: Peak accounting saturates in m: every registered kind that opts in
+#: (``ScheduleKind.peak_saturates``) reaches its steady-state 1F1B
+#: cadence within the warmup ramp, after which per-stage peak stash /
+#: spill counts and load-positivity are m-independent. 4*p*seq_chunks is
+#: comfortably past every builder's warmup (max (v+1)p-ish) and is
+#: divisible by p, so it is a valid interleaved m. Verified by a grid
+#: property test (tests/test_planner_bnb.py).
+PEAK_SATURATION_FACTOR = 4
+
+
+def peak_template_spec(spec: ScheduleSpec) -> ScheduleSpec:
+    """The cheapest spec with identical per-stage peak accounting
+    (``peak_stash``/``peak_spilled``/``bounds`` and load-positivity) —
+    ``spec`` itself unless its kind saturates and m is past the
+    saturation point, in which case m binds down to the saturation
+    template. Feasibility-style consumers (``memory_model``) compile the
+    template instead of the full stream; consumers that need the actual
+    instruction streams or move *counts* must compile ``spec``."""
+    entry = spec.entry
+    if not entry.peak_saturates or not spec.bound:
+        return spec
+    msat = PEAK_SATURATION_FACTOR * spec.p * spec.seq_chunks
+    if spec.m <= msat:
+        return spec
+    return dataclasses.replace(spec, m=msat)
+
+
+def _compile(spec: ScheduleSpec) -> Schedule:
     if not spec.bound:
         raise ValueError(f"cannot compile unbound spec (m=0): {spec}")
     p = spec.p
@@ -558,7 +644,7 @@ Handler = Callable[[int, Any], Any]
 
 def run(streams: Mapping[int, Sequence[Any]],
         handlers: Mapping[str, Handler], *, greedy: bool = True,
-        observer: Optional[Any] = None) -> int:
+        observer: Optional[Any] = None, dep_gated: bool = False) -> int:
     """The ready-instruction dispatch loop — the ONLY scheduling loop in
     the codebase. Simulator, executor, and stash accounting are handler
     sets over it.
@@ -572,6 +658,17 @@ def run(streams: Mapping[int, Sequence[Any]],
     counts over. A full round with no progress raises
     ``ScheduleDeadlock``. Returns the number of instructions dispatched.
 
+    ``dep_gated=True`` selects the event-driven engine for compiled
+    ``PlannedInstr`` streams whose handlers block exactly when
+    ``ins.dep`` has not retired (the simulator and the executor): stages
+    park on their head instruction's unretired dep and are re-queued by
+    the retirement that satisfies it, instead of the engine re-scanning
+    every stream every round. Dispatch order is bit-identical to the
+    scan loop for both greedy and round-robin modes (property-pinned in
+    tests). The default scan path remains for handler sets that do not
+    follow the dep discipline — the stash accounting's blind round-robin
+    counting merge, and raw ``Instr`` streams with no dep edges.
+
     ``observer`` (the ``repro.obs.events.Observer`` contract, duck-typed)
     gets a ``dispatch(stage, ins)`` callback for every instruction the
     loop retires, in engine order — the one seam every event stream
@@ -579,6 +676,9 @@ def run(streams: Mapping[int, Sequence[Any]],
     off. ``None`` (the default) is zero-cost: the loop body is exactly
     the pre-instrumentation code path.
     """
+    if dep_gated:
+        return _run_events(streams, handlers, greedy=greedy,
+                           observer=observer)
     stages = sorted(streams)
     idx = {i: 0 for i in stages}
     remaining = sum(len(streams[i]) for i in stages)
@@ -601,6 +701,76 @@ def run(streams: Mapping[int, Sequence[Any]],
                     break
         if not progressed:
             raise ScheduleDeadlock(idx, streams)
+    return done
+
+
+def _run_events(streams: Mapping[int, Sequence[Any]],
+                handlers: Mapping[str, Handler], *, greedy: bool = True,
+                observer: Optional[Any] = None) -> int:
+    """Event-driven dispatch over dep-resolved streams (``run`` with
+    ``dep_gated=True``).
+
+    A stage whose head instruction's ``dep`` has not retired parks in
+    ``waiting`` under that dep key; the dispatch that publishes the key
+    re-queues every parked waiter. Two min-heaps replay the scan loop's
+    visit order exactly: ``cur`` holds the stages still to visit this
+    sweep (= one ``for i in stages`` round of the scan loop), ``nxt``
+    the stages runnable next sweep. A waiter ``j`` woken while the
+    cursor is at stage ``i`` goes to ``cur`` iff ``j > i`` — in the
+    scan loop, exactly those stages would still be visited in the same
+    round — else to ``nxt``. Both heaps empty with instructions
+    remaining (or a full sweep of handler-level ``BLOCKED`` refusals,
+    which the dep discipline says cannot happen) is the same deadlock
+    the scan loop diagnoses.
+    """
+    idx = {i: 0 for i in streams}
+    remaining = sum(len(s) for s in streams.values())
+    done = 0
+    retired: set = set()
+    waiting: Dict[Any, List[int]] = {}
+    cur = [i for i in streams if streams[i]]
+    heapq.heapify(cur)
+    nxt: List[int] = []
+    push, pop = heapq.heappush, heapq.heappop
+    while remaining:
+        progressed = False
+        while cur:
+            i = pop(cur)
+            stream = streams[i]
+            n = len(stream)
+            while idx[i] < n:
+                ins = stream[idx[i]]
+                dep = ins.dep
+                if dep is not None and dep not in retired:
+                    waiting.setdefault(dep, []).append(i)
+                    break
+                if handlers[ins.op](i, ins) is BLOCKED:
+                    # a handler refusing a dep-retired instruction is
+                    # outside the dep_gated contract; retry next sweep
+                    # (a whole sweep of refusals raises below, exactly
+                    # like a no-progress scan round)
+                    push(nxt, i)
+                    break
+                idx[i] += 1
+                remaining -= 1
+                done += 1
+                progressed = True
+                retired.add(ins.done_key)
+                for j in waiting.pop(ins.done_key, ()):
+                    push(cur if j > i else nxt, j)
+                if observer is not None:
+                    observer.dispatch(i, ins)
+                if not greedy:
+                    if idx[i] < n:
+                        dep = stream[idx[i]].dep
+                        if dep is None or dep in retired:
+                            push(nxt, i)
+                        else:
+                            waiting.setdefault(dep, []).append(i)
+                    break
+        if remaining and (not progressed or not nxt):
+            raise ScheduleDeadlock(idx, streams)
+        cur, nxt = nxt, cur
     return done
 
 

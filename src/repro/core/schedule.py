@@ -27,6 +27,7 @@ registry that extends the op set.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Dict, List, Optional, Tuple
 
 F, B, EVICT, LOAD = "F", "B", "EVICT", "LOAD"
@@ -50,6 +51,21 @@ class Instr:
 Stream = List[Instr]
 
 
+# Base F/B streams are pure functions of small integer tuples, rebuilt
+# for every cap/residency/depth ladder neighbor the planner compiles —
+# the cached tuple variants (suffix ``_t``) make that rebuild a lookup.
+# The public builders return fresh lists (the historical mutable API);
+# in-module consumers (the balanced builders' spill rewrites) read the
+# tuples directly and never mutate them.
+@functools.lru_cache(maxsize=1024)
+def _gpipe_t(p: int, m: int, stage: int,
+             seq_chunks: int = 1) -> Tuple[Instr, ...]:
+    c = seq_chunks
+    return tuple([Instr(F, j, 0, s) for j in range(m) for s in range(c)]
+                 + [Instr(B, j, 0, c - 1 - s) for j in range(m)
+                    for s in range(c)])
+
+
 def gpipe(p: int, m: int, stage: int, seq_chunks: int = 1) -> Stream:
     """All forwards, then all backwards. Peak stash = m (m * seq_chunks
     sliced units when the sequence is sliced).
@@ -58,25 +74,12 @@ def gpipe(p: int, m: int, stage: int, seq_chunks: int = 1) -> Stream:
     the retained KV of slices < i); backwards run slices in REVERSE order
     within each microbatch so the executor can accumulate the prefix-KV
     cotangents in one pass (docs/longcontext.md)."""
-    c = seq_chunks
-    return ([Instr(F, j, 0, s) for j in range(m) for s in range(c)]
-            + [Instr(B, j, 0, c - 1 - s) for j in range(m)
-               for s in range(c)])
+    return list(_gpipe_t(p, m, stage, seq_chunks))
 
 
-def one_f_one_b(p: int, m: int, stage: int, seq_chunks: int = 1) -> Stream:
-    """Non-interleaved 1F1B (DAPPLE / Megatron default).
-
-    Stage i runs min(p-i-1, m) warmup forwards, then alternates F/B, then
-    drains. Peak in-flight stash = min(p - i, m)  — the paper's "stage x
-    stores p - x activations" imbalance.
-
-    ``seq_chunks=c`` slices every microbatch into c sequence slices
-    (SlimPipe direction): the pipeline unit becomes one slice, forwards
-    visit slices in causal order, backwards in reverse order within each
-    microbatch, and warmup grows by c - 1 (the extra ramp that keeps the
-    last stage's B0 fed). At c=1 this is byte-for-byte the classic
-    stream."""
+@functools.lru_cache(maxsize=1024)
+def _one_f_one_b_t(p: int, m: int, stage: int,
+                   seq_chunks: int = 1) -> Tuple[Instr, ...]:
     c = seq_chunks
     total = m * c
     warmup = min(p - stage - 1 + (c - 1), total)
@@ -100,7 +103,23 @@ def one_f_one_b(p: int, m: int, stage: int, seq_chunks: int = 1) -> Stream:
     while nb < total:
         mb, sl = bwd(nb)
         out.append(Instr(B, mb, 0, sl)); nb += 1
-    return out
+    return tuple(out)
+
+
+def one_f_one_b(p: int, m: int, stage: int, seq_chunks: int = 1) -> Stream:
+    """Non-interleaved 1F1B (DAPPLE / Megatron default).
+
+    Stage i runs min(p-i-1, m) warmup forwards, then alternates F/B, then
+    drains. Peak in-flight stash = min(p - i, m)  — the paper's "stage x
+    stores p - x activations" imbalance.
+
+    ``seq_chunks=c`` slices every microbatch into c sequence slices
+    (SlimPipe direction): the pipeline unit becomes one slice, forwards
+    visit slices in causal order, backwards in reverse order within each
+    microbatch, and warmup grows by c - 1 (the extra ramp that keeps the
+    last stage's B0 fed). At c=1 this is byte-for-byte the classic
+    stream."""
+    return list(_one_f_one_b_t(p, m, stage, seq_chunks))
 
 
 def bpipe_cap(p: int) -> int:
@@ -142,17 +161,15 @@ def bpipe(p: int, m: int, stage: int, cap: int | None = None,
     """
     cap = bpipe_cap(p) + (seq_chunks - 1) if cap is None else cap
     assert cap >= 2, cap
-    return _balance(one_f_one_b(p, m, stage, seq_chunks), cap)
+    return _balance(_one_f_one_b_t(p, m, stage, seq_chunks), cap)
 
 
 # ---------------------------------------------------------------------------
 # Interleaved (virtual-chunk) 1F1B — beyond-paper extension
 # ---------------------------------------------------------------------------
-def one_f_one_b_interleaved(p: int, m: int, stage: int, v: int = 2) -> Stream:
-    """Megatron interleaved 1F1B: device ``stage`` hosts v model chunks
-    (virtual stages stage + c*p). Bubble shrinks ~v-fold; warmup stash
-    grows to 2(p-stage-1) + (v-1)p + 1 units (each 1/v the layers).
-    Requires m % p == 0 and v >= 2."""
+@functools.lru_cache(maxsize=1024)
+def _one_f_one_b_interleaved_t(p: int, m: int, stage: int,
+                               v: int = 2) -> Tuple[Instr, ...]:
     assert v >= 2 and m % p == 0, (v, m, p)
     total = m * v
 
@@ -182,7 +199,15 @@ def one_f_one_b_interleaved(p: int, m: int, stage: int, v: int = 2) -> Stream:
         c, mb = bwd_unit(nb)
         out.append(Instr(B, mb, c))
         nb += 1
-    return out
+    return tuple(out)
+
+
+def one_f_one_b_interleaved(p: int, m: int, stage: int, v: int = 2) -> Stream:
+    """Megatron interleaved 1F1B: device ``stage`` hosts v model chunks
+    (virtual stages stage + c*p). Bubble shrinks ~v-fold; warmup stash
+    grows to 2(p-stage-1) + (v-1)p + 1 units (each 1/v the layers).
+    Requires m % p == 0 and v >= 2."""
+    return list(_one_f_one_b_interleaved_t(p, m, stage, v))
 
 
 def interleaved_peak(p: int, m: int, stage: int, v: int = 2) -> int:
@@ -207,7 +232,7 @@ def bpipe_interleaved(p: int, m: int, stage: int, v: int = 2,
     planner-chosen ``cap`` override, >= 2)."""
     cap = bpipe_interleaved_cap(p, v) if cap is None else cap
     assert cap >= 2, cap
-    return _balance(one_f_one_b_interleaved(p, m, stage, v), cap)
+    return _balance(_one_f_one_b_interleaved_t(p, m, stage, v), cap)
 
 
 # ---------------------------------------------------------------------------
@@ -242,6 +267,17 @@ class ScheduleKind:
       cap_roof:    ``(p, m, v) -> int`` — the cap above which balancing
                    degenerates to the unbalanced twin; bounds the
                    planner's cap search (balanced kinds only).
+      peak_saturates: per-stage peak stash/spill accounting is
+                   m-independent once m passes the warmup ramp
+                   (``plan.PEAK_SATURATION_FACTOR * p * seq_chunks``) —
+                   true for the 1F1B cadence family, false for
+                   all-forwards-first shapes like gpipe (peak = m).
+                   Opting in lets feasibility-style consumers bind a
+                   large-m spec to a small saturation template
+                   (``plan.peak_template_spec``) instead of compiling
+                   the full stream. Leave False for a new kind unless
+                   the property holds (tests/test_planner_bnb.py pins
+                   it for the built-ins).
     """
     name: str
     builder: Callable[..., Stream]
@@ -250,6 +286,7 @@ class ScheduleKind:
     sliced: bool = False
     default_cap: Optional[Callable[[int, int], int]] = None
     cap_roof: Optional[Callable[[int, int, int], int]] = None
+    peak_saturates: bool = False
 
     def __post_init__(self):
         if self.balanced and (self.default_cap is None
@@ -309,14 +346,15 @@ def unregister(name: str) -> None:
 
 for _entry in (
     ScheduleKind("gpipe", gpipe, sliced=True),
-    ScheduleKind("1f1b", one_f_one_b, sliced=True),
+    ScheduleKind("1f1b", one_f_one_b, sliced=True, peak_saturates=True),
     ScheduleKind("bpipe", bpipe, balanced=True, sliced=True,
+                 peak_saturates=True,
                  default_cap=lambda p, v: bpipe_cap(p),
                  cap_roof=lambda p, m, v: max(min(p, m), 2)),
     ScheduleKind("1f1b_interleaved", one_f_one_b_interleaved,
-                 interleaved=True),
+                 interleaved=True, peak_saturates=True),
     ScheduleKind("bpipe_interleaved", bpipe_interleaved, interleaved=True,
-                 balanced=True,
+                 balanced=True, peak_saturates=True,
                  default_cap=bpipe_interleaved_cap,
                  cap_roof=lambda p, m, v: max(interleaved_peak(p, m, 0, v),
                                               2)),

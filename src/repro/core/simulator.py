@@ -267,7 +267,8 @@ def _simulate(cfg: SimConfig, greedy: bool = True,
     _stall_ops = tuple(op for op, pol in respol.RESTORE_OPS.items()
                        if pol.moves_data)
 
-    P.run(schedule.streams, handlers, greedy=greedy, observer=observer)
+    P.run(schedule.streams, handlers, greedy=greedy, observer=observer,
+          dep_gated=True)
     makespan = max(max(t_stage.values()), state["last_b"])
     return SimResult(makespan=makespan,
                      busy=[busy[i] for i in range(p)],

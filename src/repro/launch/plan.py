@@ -76,6 +76,13 @@ def main(argv=None):
                          "lengths c divides; default: unsliced only)")
     ap.add_argument("--overhead", type=float, default=0.0,
                     help="fractional BPipe overhead inflating break-even")
+    ap.add_argument("--exhaustive", action="store_true",
+                    help="simulate every feasible candidate instead of the "
+                         "branch-and-bound search (same recommendation, "
+                         "slower — docs/planner.md 'Search performance')")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print search statistics: verdict counts and the "
+                         "compile-cache hit/miss/bind counters")
     ap.add_argument("--top", type=int, default=16,
                     help="table rows to print (0 = all)")
     ap.add_argument("--csv", action="store_true",
@@ -138,11 +145,29 @@ def main(argv=None):
     else:
         cost = cost_model_for(cfg, CHIPS[args.chip])
 
+    if args.verbose:
+        from repro.core import plan as plan_mod
+        plan_mod.compile_cache_stats(reset=True)
     ranked = plan_config(n, cfg, args.hbm_gb * 2**30, cost=cost,
                          search=search, link_bw=LINKS[args.link],
                          overhead=args.overhead,
                          host_bw=(args.host_bw * 1e9 if args.host_bw
-                                  else None))
+                                  else None),
+                         exhaustive=args.exhaustive)
+    if args.verbose:
+        from collections import Counter
+
+        from repro.core import plan as plan_mod
+        counts = Counter(p.verdict for p in ranked)
+        simulated = sum(1 for p in ranked if p.makespan > 0)
+        stats = plan_mod.compile_cache_stats()
+        print(f"# search: {len(ranked)} enumerated, {simulated} simulated, "
+              + ", ".join(f"{counts.get(k, 0)} {k}"
+                          for k in ("ok", "reject", "pruned", "infeasible")))
+        print(f"# compile cache: {stats['hits']} hits, "
+              f"{stats['misses']} misses, {stats['binds']} depth-binds, "
+              f"{stats['evictions']} evictions, size {stats['size']}"
+              f"/{stats['maxsize']}")
     if args.csv:
         for row in report.csv_rows(ranked, "plan", cfg.name):
             print(row)

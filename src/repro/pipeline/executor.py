@@ -490,7 +490,7 @@ class PipelineExecutor:
             handlers[op] = wrap(mech_release[pol.mechanism])
         for op, pol in respol.RESTORE_OPS.items():
             handlers[op] = wrap(mech_restore[pol.mechanism])
-        P.run(schedule.streams, handlers, observer=observer)
+        P.run(schedule.streams, handlers, observer=observer, dep_gated=True)
         xfers.drain()                       # no copy escapes the step
 
         loss = sum(losses.values()) * scale

@@ -48,13 +48,18 @@ def plan_config(n: Notation, cfg: Optional[ModelConfig], hbm_bytes: float,
                 overhead: float = 0.0,
                 workspace: float = feasibility.DEFAULT_WORKSPACE,
                 host_bw: Optional[float] = None,
+                exhaustive: bool = False,
                 ) -> List[RankedPlan]:
     """End-to-end: enumerate -> prune -> rank for one config.
-    ``host_bw`` (bytes/s) prices host_offload residency; None = PCIe."""
+    ``host_bw`` (bytes/s) prices host_offload residency; None = PCIe.
+    ``exhaustive=True`` disables the branch-and-bound pruning and
+    simulates every feasible candidate (same recommendation, slower —
+    the escape hatch and the differential-test oracle)."""
     if cost is None:
         cost = cost_model_for(cfg)
     cands = space.enumerate_candidates(
         n, search, cfg.num_layers if cfg is not None else 0)
     kw = {} if host_bw is None else {"host_bw": host_bw}
     return rank.rank(n, cands, cost, hbm_bytes, cfg, link_bw=link_bw,
-                     overhead=overhead, workspace=workspace, **kw)
+                     overhead=overhead, workspace=workspace,
+                     exhaustive=exhaustive, **kw)

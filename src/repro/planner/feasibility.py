@@ -59,7 +59,13 @@ def check(n: Notation, cand: Candidate, hbm_bytes: float,
 
     try:
         spec = cand.spec(p)
-        peak = mm.max_stage_bytes(nb, cand.attention, spec, cfg)
+        # template=True: peak accounting saturates in m, so a large-m
+        # candidate is priced off its small saturation template
+        # (plan.peak_template_spec) — identical peaks, fraction of the
+        # compile cost. Exception behavior (cap unbalanceable) is
+        # m-independent past saturation too (property-pinned).
+        peak = mm.max_stage_bytes(nb, cand.attention, spec, cfg,
+                                  template=True)
     except (AssertionError, IndexError, ValueError):
         # _balance cannot hold the stream under this cap (too tight for
         # the in-flight transients at this (p, m, v)).

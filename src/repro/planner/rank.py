@@ -192,12 +192,123 @@ class RankedPlan:
     baseline_b: int = 0
     moves: int = 0              # EVICT+LOAD count of the stream built
     traffic_bytes: float = 0.0  # moves x per-unit stash bytes
-    verdict: str = ""           # "ok" | "reject" | "infeasible"
+    mfu_bound: float = 0.0      # admissible MFU upper bound (B&B pricing)
+    verdict: str = ""           # "ok" | "reject" | "pruned" | "infeasible"
     note: str = ""
 
     @property
     def ok(self) -> bool:
         return self.verdict == "ok"
+
+
+#: Sort order of verdicts in the ranked table. "pruned" rows (candidates
+#: the branch-and-bound search discarded without simulating: bound below
+#: the incumbent, dominated depth twins, or break-even rejects at
+#: b <= baseline) sit between the simulated rejects and the infeasible.
+VERDICT_ORDER = {"ok": 0, "reject": 1, "pruned": 2, "infeasible": 3}
+
+#: Pruning margin on MFU fractions: a candidate is discarded only when
+#: its admissible bound is below the incumbent by more than this — keeps
+#: float noise in the makespan summation from ever pruning an exact tie
+#: (ties MUST be simulated for the stable tie-break to match exhaustive
+#: search).
+PRUNE_MARGIN = 1e-9
+
+
+def mfu_upper_bound(n: Notation, cand: Candidate, cost: CostModel) -> float:
+    """Admissible MFU upper bound for ``cand`` priced from the cost model
+    alone (no compile, no simulation): the kind-appropriate ideal
+    makespan — ``(m + ramp) * T`` with the plain (p-1), interleaved
+    (p-1)/v, or sliced (p-1)/c ramp (``simulator.ideal_makespan``
+    family) — converted to MFU. The simulator can only ADD time to the
+    ideal (hops, stalls, recompute, warmup skew), so simulated MFU never
+    exceeds this bound; a candidate whose bound cannot beat the incumbent
+    best MFU cannot be the recommendation."""
+    nb = n.replace(b=cand.b)
+    T = cost.stage_T(nb, cand.attention)
+    entry = sched.SCHEDULES[cand.kind]
+    if entry.interleaved:
+        ramp = (n.p - 1) / cand.v
+    elif entry.sliced and cand.seq_chunks > 1:
+        ramp = (n.p - 1) / cand.seq_chunks
+    else:
+        ramp = n.p - 1
+    lb = (cand.m + ramp) * T
+    return cost.full_flops(n) / (lb * n.p * n.t * cost.peak_per_chip)
+
+
+def _move_floor(n: Notation, rp: "RankedPlan", cost: CostModel,
+                link_bw: float, host_bw: float) -> float:
+    """Makespan floor from mandatory residency traffic: the busiest
+    per-stage channel must fit its moves' serialized busy time inside the
+    makespan (every release completes before its restore issues, every
+    restore before its backward — all inside [0, makespan], and a channel
+    runs FIFO). Move counts come from the candidate's saturation template
+    (``plan.peak_template_spec`` — already compiled by feasibility), which
+    never over-counts: per-stage counts are monotone nondecreasing in m
+    past saturation (property-pinned). 0.0 when the policy moves no
+    bytes."""
+    cand = rp.cand
+    spec = cand.spec(n.p)
+    if not spec.policy.moves_data:
+        return 0.0
+    nb = n.replace(b=cand.b)
+    sch = plan_mod.compile_plan(plan_mod.peak_template_spec(spec))
+    unit = mm.eviction_bytes(nb, cand.attention, spec.v, spec.seq_chunks)
+    if spec.policy.mechanism == "swap":
+        t_rel = t_res = (unit / link_bw) * max(rp.feas.pair_hops, 1)
+    else:
+        t_rel = t_res = unit / host_bw
+    return max((max(sch.num_evictions.get(i, 0) * t_rel,
+                    sch.num_loads.get(i, 0) * t_res)
+                for i in range(n.p)), default=0.0)
+
+
+def _price(rp: "RankedPlan", n: Notation, cost: CostModel,
+           link_bw: float, host_bw: float) -> None:
+    """Simulate a feasible candidate and fill its metrics (verdict
+    "ok" — the break-even pass may downgrade it afterwards)."""
+    cand = rp.cand
+    nb = n.replace(b=cand.b)
+    spec = cand.spec(n.p)
+    simcfg = sim_config_for(n, rp, cost, link_bw, host_bw)
+    T = simcfg.Tf + simcfg.Tb
+    res = SIM.simulate(simcfg)
+    F = cost.full_flops(n)
+    rp.stage_T = T
+    rp.makespan = res.makespan
+    rp.bubble = res.bubble_fraction
+    rp.load_stall = res.load_stall
+    rp.move_time = res.move_time
+    # Traffic accounting from the stream actually built (cap- and
+    # v-aware), not a default-cap closed form.
+    rp.moves = plan_mod.num_moves(spec)
+    rp.traffic_bytes = mm.traffic_bytes(nb, cand.attention, spec)
+    rp.mfu = SIM.mfu_from_sim(res, F, n.p, n.t, cost.peak_per_chip)
+    rp.mfu_eq3 = E.mfu_model(nb, F, F / n.p,
+                             cost.mfu_stage(nb, cand.attention))
+    rp.verdict = "ok"
+
+
+def _check_feas(rp: "RankedPlan", n: Notation, hbm_bytes: float,
+                cfg: Optional[ModelConfig], workspace: float,
+                stage_to_device: Optional[Tuple[int, ...]]) -> bool:
+    rp.feas = feasibility.check(n, rp.cand, hbm_bytes, cfg, workspace,
+                                stage_to_device)
+    if not rp.feas.ok:
+        rp.verdict, rp.note = "infeasible", rp.feas.reason
+        return False
+    return True
+
+
+def _is_managed(cand: Candidate) -> bool:
+    return (cand.kind in sched.BPIPE_FAMILY
+            or cand.residency not in ("none",))
+
+
+def _reject_note(req: float, got: float, base_b: int) -> str:
+    return (f"break-even: needs >={req:.3f}x stage gain over "
+            f"1f1b b={base_b}, got {got:.3f}x")
 
 
 def rank(n: Notation, cands: Iterable[Candidate], cost: CostModel,
@@ -206,8 +317,21 @@ def rank(n: Notation, cands: Iterable[Candidate], cost: CostModel,
          workspace: float = feasibility.DEFAULT_WORKSPACE,
          stage_to_device: Optional[Tuple[int, ...]] = None,
          overhead: float = 0.0,
-         host_bw: float = PCIE_BW) -> List[RankedPlan]:
+         host_bw: float = PCIE_BW,
+         exhaustive: bool = False) -> List[RankedPlan]:
     """Feasibility-prune, simulate, break-even-test and sort candidates.
+
+    The default is a branch-and-bound search: candidates are priced with
+    an admissible MFU upper bound (``mfu_upper_bound`` plus a
+    residency move-time floor) before any compile or simulation, and
+    skipped — verdict "pruned" — when the bound cannot beat the
+    incumbent best simulated MFU, when a stall-free lower-depth twin
+    makes a deeper ladder rung timeline-identical, or when a break-even
+    reject at b <= baseline cannot affect any verdict or quote. The
+    pruned search selects the IDENTICAL recommendation per attention arm
+    as ``exhaustive=True`` (which simulates every feasible candidate —
+    the escape hatch and the differential-test oracle); see
+    docs/planner.md "Search performance" for the argument.
 
     ``overhead`` inflates the break-even bar by a fractional BPipe cost
     (``estimator.required_stage_gain``'s knob); 0.0 mirrors the paper's
@@ -218,42 +342,40 @@ def rank(n: Notation, cands: Iterable[Candidate], cost: CostModel,
     selective_recompute is FLOPs-costed by the simulator's RECOMPUTE
     handler instead.
     """
-    plans: List[RankedPlan] = []
-    for cand in cands:
-        feas = feasibility.check(n, cand, hbm_bytes, cfg, workspace,
-                                 stage_to_device)
-        rp = RankedPlan(cand=cand, feas=feas)
-        if not feas.ok:
-            rp.verdict, rp.note = "infeasible", feas.reason
-            plans.append(rp)
-            continue
-        nb = n.replace(b=cand.b)
-        spec = cand.spec(n.p)
-        simcfg = sim_config_for(n, rp, cost, link_bw, host_bw)
-        T = simcfg.Tf + simcfg.Tb
-        res = SIM.simulate(simcfg)
-        F = cost.full_flops(n)
-        rp.stage_T = T
-        rp.makespan = res.makespan
-        rp.bubble = res.bubble_fraction
-        rp.load_stall = res.load_stall
-        rp.move_time = res.move_time
-        # Traffic accounting from the stream actually built (cap- and
-        # v-aware), not a default-cap closed form.
-        rp.moves = plan_mod.num_moves(spec)
-        rp.traffic_bytes = mm.traffic_bytes(nb, cand.attention, spec)
-        rp.mfu = SIM.mfu_from_sim(res, F, n.p, n.t, cost.peak_per_chip)
-        rp.mfu_eq3 = E.mfu_model(nb, F, F / n.p,
-                                 cost.mfu_stage(nb, cand.attention))
-        rp.verdict = "ok"
-        plans.append(rp)
+    plans = [RankedPlan(cand=cand,
+                        feas=feasibility.Feasibility(False, "not evaluated"))
+             for cand in cands]
+    if exhaustive:
+        for rp in plans:
+            if _check_feas(rp, n, hbm_bytes, cfg, workspace,
+                           stage_to_device):
+                _price(rp, n, cost, link_bw, host_bw)
+        _break_even_pass(n, plans, cost, overhead)
+    else:
+        arms = []
+        for rp in plans:
+            if rp.cand.attention not in arms:
+                arms.append(rp.cand.attention)
+        for att in arms:
+            _rank_arm(n, [rp for rp in plans if rp.cand.attention == att],
+                      cost, hbm_bytes, cfg, link_bw, workspace,
+                      stage_to_device, overhead, host_bw)
 
-    # §4 break-even pass, per attention arm, against the best feasible
-    # UNMANAGED plain-1F1B plan (the paper's baseline schedule — a
-    # residency-managed 1f1b is a contender, not the baseline). Every
-    # residency-managed plan faces the same bar: its whole point is
-    # unlocking a larger micro batch, so it must deliver the stage gain
-    # eq. 4 demands, whichever mechanism pays for the memory.
+    # move_time breaks equal-MFU ties: at the same simulated throughput,
+    # prefer the plan with the least residency traffic in flight (less
+    # exposure to link contention the model cannot see).
+    plans.sort(key=lambda p: (VERDICT_ORDER[p.verdict], -p.mfu, p.move_time))
+    return plans
+
+
+def _break_even_pass(n: Notation, plans: List[RankedPlan], cost: CostModel,
+                     overhead: float) -> None:
+    """§4 break-even pass, per attention arm, against the best feasible
+    UNMANAGED plain-1F1B plan (the paper's baseline schedule — a
+    residency-managed 1f1b is a contender, not the baseline). Every
+    residency-managed plan faces the same bar: its whole point is
+    unlocking a larger micro batch, so it must deliver the stage gain
+    eq. 4 demands, whichever mechanism pays for the memory."""
     for att in {p.cand.attention for p in plans}:
         arm = [p for p in plans if p.cand.attention == att]
         base_cands = [p for p in arm if p.cand.kind == "1f1b"
@@ -262,9 +384,7 @@ def rank(n: Notation, cands: Iterable[Candidate], cost: CostModel,
                    key=lambda p: p.mfu, default=None)
         for p in arm:
             c = p.cand
-            managed = (c.kind in sched.BPIPE_FAMILY
-                       or c.residency not in ("none",))
-            if not p.ok or not managed:
+            if not p.ok or not _is_managed(c):
                 continue
             if base is None:
                 # distinguish "nothing unmanaged fits" (residency
@@ -282,15 +402,168 @@ def rank(n: Notation, cands: Iterable[Candidate], cost: CostModel,
             p.baseline_b = base.cand.b
             if got + 1e-12 < req:
                 p.verdict = "reject"
-                p.note = (f"break-even: needs >={req:.3f}x stage gain over "
-                          f"1f1b b={base.cand.b}, got {got:.3f}x")
+                p.note = _reject_note(req, got, base.cand.b)
 
-    order = {"ok": 0, "reject": 1, "infeasible": 2}
-    # move_time breaks equal-MFU ties: at the same simulated throughput,
-    # prefer the plan with the least residency traffic in flight (less
-    # exposure to link contention the model cannot see).
-    plans.sort(key=lambda p: (order[p.verdict], -p.mfu, p.move_time))
-    return plans
+
+def _rank_arm(n: Notation, arm: List[RankedPlan], cost: CostModel,
+              hbm_bytes: float, cfg: Optional[ModelConfig], link_bw: float,
+              workspace: float,
+              stage_to_device: Optional[Tuple[int, ...]],
+              overhead: float, host_bw: float) -> None:
+    """Branch-and-bound over one attention arm.
+
+    Funnel: (1) the unmanaged plain-1f1b baselines simulate in
+    bound-descending order under an incumbent (a pruned baseline can
+    never be the arm's best baseline: its MFU <= bound < some simulated
+    MFU); (2) managed candidates failing the cost-only break-even test
+    split into raised (b > baseline b — always simulated: they carry the
+    rejection quote in the recommendation line) and unraised (pruned,
+    unless no raised reject is feasible, in which case all of them are
+    evaluated so the quote's fallback path sees the same set as
+    exhaustive search); (3) everything else simulates in bound-descending
+    order under the incumbent, with stall-free depth dominance inside
+    transfer-depth ladders. Every candidate whose simulated MFU could tie
+    or beat the final maximum is simulated (bound >= MFU and strictly-
+    below-incumbent pruning), so the post-sort recommendation — and the
+    stable tie-break, since ``plans`` keeps enumeration order — is
+    identical to exhaustive search."""
+    att = arm[0].cand.attention
+    bound_cache: dict = {}
+
+    def bound(rp: RankedPlan) -> float:
+        key = rp.cand
+        b = bound_cache.get(key)
+        if b is None:
+            b = bound_cache[key] = mfu_upper_bound(n, rp.cand, cost)
+        rp.mfu_bound = b
+        return b
+
+    def feas_ok(rp: RankedPlan) -> bool:
+        return _check_feas(rp, n, hbm_bytes, cfg, workspace,
+                           stage_to_device)
+
+    # -- (1) baselines ---------------------------------------------------
+    base_cands = [rp for rp in arm if rp.cand.kind == "1f1b"
+                  and rp.cand.residency == "none"]
+    incumbent = float("-inf")
+    for rp in sorted(base_cands, key=lambda r: -bound(r)):
+        if bound(rp) < incumbent - PRUNE_MARGIN:
+            rp.verdict = "pruned"
+            rp.note = (f"ideal-bound {bound(rp) * 100:.2f}% MFU "
+                       f"< incumbent {incumbent * 100:.2f}%")
+            continue
+        if feas_ok(rp):
+            _price(rp, n, cost, link_bw, host_bw)
+            if rp.mfu > incumbent:
+                incumbent = rp.mfu
+    base = max((rp for rp in base_cands if rp.ok),
+               key=lambda r: r.mfu, default=None)
+
+    # -- (2) classify the rest against the cost-only break-even test -----
+    contenders: List[RankedPlan] = []
+    rej_raised: List[RankedPlan] = []
+    rej_unraised: List[RankedPlan] = []
+    gains: dict = {}
+    for rp in arm:
+        c = rp.cand
+        if c.kind == "1f1b" and c.residency == "none":
+            continue
+        if base is not None and _is_managed(c):
+            req = _required_gain(n, c, base.cand, overhead)
+            got = cost.stage_gain(n, c.b, base.cand.b, att)
+            gains[id(rp)] = (req, got)
+            if got + 1e-12 < req:
+                (rej_raised if c.b > base.cand.b
+                 else rej_unraised).append(rp)
+                continue
+        contenders.append(rp)
+
+    def set_gains(rp: RankedPlan) -> Tuple[float, float]:
+        req, got = gains[id(rp)]
+        rp.required_gain, rp.achieved_gain = req, got
+        rp.baseline_b = base.cand.b
+        return req, got
+
+    # -- (3) contenders under the incumbent ------------------------------
+    stall_free: dict = {}   # depth-ladder twin key -> simulated rung
+    for rp in sorted(contenders, key=lambda r: -bound(r)):
+        c = rp.cand
+        if bound(rp) < incumbent - PRUNE_MARGIN:
+            rp.verdict = "pruned"
+            rp.note = (f"ideal-bound {bound(rp) * 100:.2f}% MFU "
+                       f"< incumbent {incumbent * 100:.2f}%")
+            continue
+        twin_key = (c.kind, c.b, c.v, c.cap, c.residency, c.seq_chunks)
+        twin = stall_free.get(twin_key)
+        if twin is not None and twin.cand.depth < c.depth:
+            # Zero-stall dominance: deeper overlap can only start moves
+            # earlier; with no stall to hide the compute timeline (and
+            # with it makespan/MFU/move_time) is identical, and the
+            # stable tie-break prefers the shallower rung.
+            rp.verdict = "pruned"
+            rp.note = (f"depth={twin.cand.depth} twin is "
+                       f"stall-free — identical timeline, loses the "
+                       f"depth tie-break")
+            continue
+        if not feas_ok(rp):
+            continue
+        if spec_moves_data(c, n.p):
+            floor = _move_floor(n, rp, cost, link_bw, host_bw)
+            if floor > 0.0:
+                fb = (cost.full_flops(n)
+                      / (max(floor, 1e-300) * n.p * n.t
+                         * cost.peak_per_chip))
+                if fb < incumbent - PRUNE_MARGIN:
+                    rp.mfu_bound = min(rp.mfu_bound or fb, fb)
+                    rp.verdict = "pruned"
+                    rp.note = (f"move-time floor caps MFU at "
+                               f"{fb * 100:.2f}% < incumbent "
+                               f"{incumbent * 100:.2f}%")
+                    continue
+        _price(rp, n, cost, link_bw, host_bw)
+        if base is not None and _is_managed(c):
+            set_gains(rp)
+        elif _is_managed(c):
+            rp.note = ("no feasible 1f1b baseline "
+                       "(residency enables the arm)" if base_cands
+                       else "unmanaged 1f1b baseline not searched "
+                            "(break-even untested)")
+        if rp.load_stall == 0.0 and twin_key not in stall_free:
+            stall_free[twin_key] = rp
+        if rp.mfu > incumbent:
+            incumbent = rp.mfu
+
+    # -- (4) break-even rejects ------------------------------------------
+    feasible_raised = False
+    for rp in rej_raised:
+        if not feas_ok(rp):
+            continue
+        _price(rp, n, cost, link_bw, host_bw)
+        req, got = set_gains(rp)
+        rp.verdict = "reject"
+        rp.note = _reject_note(req, got, base.cand.b)
+        feasible_raised = True
+    for rp in rej_unraised:
+        if feasible_raised:
+            # the recommendation line quotes the highest-MFU RAISED
+            # reject when one exists; an unraised reject can neither be
+            # quoted nor recommended — record the verdict without
+            # compiling or simulating it
+            req, got = set_gains(rp)
+            rp.verdict = "pruned"
+            rp.note = (_reject_note(req, got, base.cand.b)
+                       + " (b <= baseline: not simulated)")
+        elif feas_ok(rp):
+            _price(rp, n, cost, link_bw, host_bw)
+            req, got = set_gains(rp)
+            rp.verdict = "reject"
+            rp.note = _reject_note(req, got, base.cand.b)
+
+
+def spec_moves_data(cand: Candidate, p: int) -> bool:
+    """Does this candidate's residency mechanism move bytes over a
+    channel (swap or host offload — the move-floor pricing families)?"""
+    return cand.spec(p).policy.moves_data
 
 
 def recommend(ranked: List[RankedPlan],

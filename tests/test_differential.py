@@ -24,7 +24,10 @@ can upload the counterexample as an artifact.
 Example counts are env-tunable (``scripts/check.sh`` pins them):
 ``REPRO_FUZZ_EXAMPLES`` for the cheap simulator properties (default
 200), ``REPRO_FUZZ_EXEC_EXAMPLES`` for the jax-compiling executor
-properties (default 6).
+properties (default 3 — scripts/check.sh's dedicated harness step pins
+6). The executor properties are also ``slow``-MARKED: each example
+jit-compiles a real pipeline step, so a plain ``pytest -m 'not slow'``
+sweep skips them and the harness step (or ``-m slow``) owns them.
 """
 import dataclasses
 import json
@@ -42,7 +45,7 @@ from repro.memory import policy as respol
 from repro.transfer.channel import channel_key
 
 FUZZ_EXAMPLES = int(os.environ.get("REPRO_FUZZ_EXAMPLES", "200"))
-FUZZ_EXEC_EXAMPLES = int(os.environ.get("REPRO_FUZZ_EXEC_EXAMPLES", "6"))
+FUZZ_EXEC_EXAMPLES = int(os.environ.get("REPRO_FUZZ_EXEC_EXAMPLES", "3"))
 ARTIFACT = os.environ.get("REPRO_FUZZ_ARTIFACT", "fuzz_failures.json")
 
 KINDS = ("gpipe", "1f1b", "bpipe", "1f1b_interleaved", "bpipe_interleaved")
@@ -345,6 +348,7 @@ def _unmanaged_twin(spec: P.ScheduleSpec) -> P.ScheduleSpec:
                           seq_chunks=spec.seq_chunks)
 
 
+@pytest.mark.slow
 @given(st.sampled_from(_exec_specs()))
 @settings(max_examples=FUZZ_EXEC_EXAMPLES, deadline=None)
 def test_executor_differential_vs_unmanaged(spec):
@@ -365,6 +369,7 @@ def test_executor_differential_vs_unmanaged(spec):
                                          "grads != unmanaged twin"))
 
 
+@pytest.mark.slow
 @given(st.sampled_from([s for s in _exec_specs() if s.seq_chunks > 1]))
 @settings(max_examples=min(FUZZ_EXEC_EXAMPLES, 4), deadline=None)
 def test_executor_sliced_parity_vs_unchunked(spec):
@@ -388,6 +393,7 @@ def test_executor_sliced_parity_vs_unchunked(spec):
                                          "grads drift vs unchunked twin"))
 
 
+@pytest.mark.slow
 @given(st.sampled_from(_exec_specs()))
 @settings(max_examples=FUZZ_EXEC_EXAMPLES, deadline=None)
 def test_executor_bytes_agree_with_memory_model(spec):
@@ -417,6 +423,7 @@ def test_executor_bytes_agree_with_memory_model(spec):
         _report(spec, "memory", "in-flight transfers exceed the depth cap")
 
 
+@pytest.mark.slow
 @given(st.sampled_from(_exec_specs()))
 @settings(max_examples=min(FUZZ_EXEC_EXAMPLES, 4), deadline=None)
 def test_executor_and_simulator_emit_same_instruction_set(spec):

@@ -44,6 +44,10 @@ def test_planner_emits_only_feasible_plans(p, B):
     assert recommend(ranked) is not None
     for rp in ranked:
         c = rp.cand
+        if rp.verdict == "pruned":
+            # branch-and-bound discard: never simulated, no claims made
+            assert rp.makespan == 0.0 and rp.mfu == 0.0
+            continue
         if not rp.feas.ok:
             assert rp.verdict == "infeasible"
             continue

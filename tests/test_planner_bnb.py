@@ -1,0 +1,291 @@
+"""Branch-and-bound planner search: the properties the pruning rests on.
+
+Three pillars, each pinned here because ``planner.rank``'s fast path is
+only correct while they hold:
+
+  * m-saturation — for every searched kind, a schedule's per-stage peak
+    accounting (and its compile-failure behavior, and its move counts'
+    monotonicity) is determined by the saturation template at
+    ``m = PEAK_SATURATION_FACTOR * p * seq_chunks``; ``feasibility`` and
+    the move-time floor price large-m candidates off the small template.
+  * dispatch equivalence — ``plan.run(dep_gated=True)`` (the heap/ready-
+    queue engine the simulator and executor use) retires the exact
+    instruction sequence of the scan loop, greedy and round-robin alike.
+  * recommendation identity — the pruned search returns the identical
+    recommended plan (per arm and overall, quote lines included) as
+    ``exhaustive=True`` on small spaces here and on every registered
+    config in the slow-marked sweep.
+"""
+import json
+import os
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import plan as P
+from repro.core import schedule as S
+from repro.core.notation import Notation
+from repro.planner import (AnalyticCostModel, SearchSpace, plan_config,
+                           recommend, report)
+from repro.planner import rank as R
+from repro.planner import space as SP
+
+SEARCHED_KINDS = ("1f1b", "bpipe", "1f1b_interleaved", "bpipe_interleaved")
+
+
+# ---------------------------------------------------------------------------
+# Pillar 1: peak accounting saturates in m
+# ---------------------------------------------------------------------------
+def _peak_fields(sch, p):
+    return tuple((sch.peak_stash.get(i, 0), sch.peak_spilled.get(i, 0),
+                  sch.num_loads.get(i, 0) > 0, sch.bounds.get(i))
+                 for i in range(p))
+
+
+def _saturation_cases():
+    for kind in SEARCHED_KINDS:
+        entry = S.SCHEDULES[kind]
+        assert entry.peak_saturates, kind
+        for p in (2, 4, 6):
+            vs = (2, 4) if entry.interleaved else (1,)
+            for v in vs:
+                if entry.interleaved and p * v > 24:
+                    continue
+                yield kind, p, v
+
+
+@pytest.mark.parametrize("kind,p,v", list(_saturation_cases()))
+def test_peak_accounting_saturates_in_m(kind, p, v):
+    """All per-stage quantities feasibility reads are identical for every
+    m >= 4*p (the template plan.peak_template_spec binds), and move
+    counts are monotone nondecreasing in m past saturation (so the
+    move-time floor never over-counts)."""
+    msat = P.PEAK_SATURATION_FACTOR * p
+    ladder = [msat, 2 * msat, 4 * msat]
+    if S.SCHEDULES[kind].interleaved:
+        ladder = [m - m % p for m in ladder]
+    schs = []
+    for m in ladder:
+        spec = P.ScheduleSpec(kind, p, m, v=v)
+        tpl = P.peak_template_spec(spec)
+        assert tpl.m <= msat
+        schs.append(P.compile_plan(spec))
+        assert _peak_fields(P.compile_plan(tpl), p) \
+            == _peak_fields(schs[-1], p), (kind, p, v, m)
+    for a, b in zip(schs, schs[1:]):
+        for i in range(p):
+            assert a.num_evictions.get(i, 0) <= b.num_evictions.get(i, 0)
+            assert a.num_loads.get(i, 0) <= b.num_loads.get(i, 0)
+
+
+def test_unsaturating_kind_is_not_templated():
+    """gpipe's peak grows with m (every stash is held to the flush) — it
+    must keep peak_saturates=False so peak_template_spec is the
+    identity for it."""
+    assert not S.SCHEDULES["gpipe"].peak_saturates
+    spec = P.ScheduleSpec("gpipe", 4, 64)
+    assert P.peak_template_spec(spec) is spec
+    small = P.compile_plan(P.ScheduleSpec("gpipe", 4, 16))
+    big = P.compile_plan(spec)
+    assert big.peak_stash[0] == 64 != small.peak_stash[0]
+
+
+def test_template_compile_exceptions_match_full_compile():
+    """A cap the balancer cannot hold fails identically at template and
+    full m — feasibility's except-clause behavior is m-independent."""
+    for p, v in ((4, 1), (6, 1)):
+        for cap in (2, 3):
+            for m in (P.PEAK_SATURATION_FACTOR * p * 2,
+                      P.PEAK_SATURATION_FACTOR * p * 4):
+                spec = P.ScheduleSpec("bpipe", p, m, cap=cap)
+                outcomes = []
+                for s in (P.peak_template_spec(spec), spec):
+                    try:
+                        P.compile_plan(s)
+                        outcomes.append(None)
+                    except (AssertionError, IndexError, ValueError) as e:
+                        outcomes.append(type(e))
+                assert outcomes[0] == outcomes[1], (p, cap, m, outcomes)
+
+
+# ---------------------------------------------------------------------------
+# Pillar 2: the event-driven engine retires the scan loop's sequence
+# ---------------------------------------------------------------------------
+def _dispatch_order(streams, *, greedy, dep_gated):
+    """Run with dep-faithful handlers (the scan loop's dependency gate is
+    the handler returning BLOCKED; the event engine gates before calling)
+    and record the dispatch order the observer sees."""
+    order = []
+    retired = set()
+
+    class Obs:
+        def dispatch(self, i, ins):
+            order.append((i, ins.op, ins.mb, ins.chunk, ins.sl, ins.phase))
+
+    def handle(i, ins):
+        if ins.dep is not None and ins.dep not in retired:
+            return P.BLOCKED
+        retired.add(ins.done_key)
+        return None
+
+    handlers = {op: handle
+                for op in {ins.op for s in streams.values() for ins in s}}
+    done = P.run(streams, handlers, greedy=greedy, observer=Obs(),
+                 dep_gated=dep_gated)
+    return done, order
+
+
+def _golden_specs():
+    path = os.path.join(os.path.dirname(__file__), "golden",
+                        "plan_golden.json")
+    for c in json.load(open(path)):
+        yield P.ScheduleSpec(c["kind"], c["p"], c["m"], v=max(c["v"], 1),
+                             cap=c["cap"],
+                             residency=c.get("residency", "none"),
+                             seq_chunks=c.get("seq_chunks", 1))
+
+
+def test_event_engine_matches_scan_loop_on_goldens():
+    for spec in _golden_specs():
+        streams = P.compile_plan(spec).streams
+        for greedy in (True, False):
+            scan = _dispatch_order(streams, greedy=greedy, dep_gated=False)
+            ev = _dispatch_order(streams, greedy=greedy, dep_gated=True)
+            assert scan == ev, (spec.label(), greedy)
+
+
+@given(st.sampled_from(SEARCHED_KINDS), st.integers(2, 6),
+       st.integers(1, 4), st.sampled_from([True, False]),
+       st.sampled_from([True, False]))
+@settings(max_examples=40, deadline=None)
+def test_event_engine_matches_scan_loop_fuzzed(kind, p, mf, greedy, deep):
+    entry = S.SCHEDULES[kind]
+    v = 2 if entry.interleaved else 1
+    m = mf * p if entry.interleaved else mf + p
+    spec = P.ScheduleSpec(kind, p, m, v=v, depth=2 if deep else 1)
+    streams = P.compile_plan(spec).streams
+    scan = _dispatch_order(streams, greedy=greedy, dep_gated=False)
+    ev = _dispatch_order(streams, greedy=greedy, dep_gated=True)
+    assert scan == ev
+
+
+def test_event_engine_raises_same_deadlock():
+    """A stream set with an unsatisfiable dependency deadlocks in both
+    engines, with the diagnostic snapshot of per-stream positions."""
+    spec = P.ScheduleSpec("1f1b", 2, 4)
+    streams = {i: list(s)
+               for i, s in P.compile_plan(spec).streams.items()}
+    # cut the cross-stream edge supply: drop stream 0 entirely, so
+    # stream 1's first F (dep on stage 0's F) can never retire
+    streams.pop(0)
+    retired = set()
+
+    def handle(i, ins):
+        if ins.dep is not None and ins.dep not in retired:
+            return P.BLOCKED
+        retired.add(ins.done_key)
+        return None
+
+    handlers = {op: handle for op in (S.F, S.B)}
+    for dep_gated in (False, True):
+        with pytest.raises(P.ScheduleDeadlock):
+            P.run(streams, handlers, dep_gated=dep_gated)
+
+
+# ---------------------------------------------------------------------------
+# Pillar 3: pruned search == exhaustive search, recommendation-identical
+# ---------------------------------------------------------------------------
+def _assert_same_recommendation(n, ranked_fast, ranked_full, tag=""):
+    assert len(ranked_fast) == len(ranked_full)
+    for arm in R.arms_of(ranked_full) + [None]:
+        bf, bx = recommend(ranked_fast, arm), recommend(ranked_full, arm)
+        cf = bf.cand if bf else None
+        cx = bx.cand if bx else None
+        assert cf == cx, (tag, arm, cf, cx)
+        if bf is not None:
+            assert bf.mfu == bx.mfu and bf.makespan == bx.makespan
+    lines_f = report.summarize(tag or "cfg", n, ranked_fast)
+    lines_x = report.summarize(tag or "cfg", n, ranked_full)
+    assert lines_f == lines_x
+
+
+@given(st.integers(2, 4), st.sampled_from([8, 16]),
+       st.sampled_from([1.1, 1.5, 3.0]))
+@settings(max_examples=10, deadline=None)
+def test_pruned_matches_exhaustive_small(p, B, headroom):
+    from repro.core import memory_model as MM
+    n = Notation(a=4, b=1, h=256, l=16, s=128, v=512, B=B, p=p, t=1)
+    cost = AnalyticCostModel()
+    hbm = headroom * MM.max_stage_bytes(n, "recompute", "1f1b")
+    cands = list(SP.enumerate_candidates(n, SearchSpace(vs=(2,))))
+    fast = R.rank(n, cands, cost, hbm, workspace=0.0)
+    full = R.rank(n, cands, cost, hbm, workspace=0.0, exhaustive=True)
+    _assert_same_recommendation(n, fast, full, f"p{p}B{B}")
+    # the pruned table's non-pruned rows carry the exhaustive numbers
+    full_by_cand = {rp.cand: rp for rp in full}
+    pruned = 0
+    for rp in fast:
+        if rp.verdict == "pruned":
+            pruned += 1
+            continue
+        twin = full_by_cand[rp.cand]
+        assert (rp.verdict, rp.mfu, rp.makespan, rp.move_time) \
+            == (twin.verdict, twin.mfu, twin.makespan, twin.move_time)
+        assert rp.note == twin.note
+    # every verdict the exhaustive table rejects survives or is pruned —
+    # never silently promoted
+    for rp in fast:
+        if rp.verdict == "ok":
+            assert full_by_cand[rp.cand].verdict == "ok"
+
+
+@pytest.mark.slow
+def test_pruned_matches_exhaustive_every_config():
+    """The acceptance differential: identical recommended plan (spec,
+    cap, depth, residency, b) and summary lines as --exhaustive on all
+    registered configs at the paper shape."""
+    from benchmarks.planner_sweep import _pow2_at_most
+    from repro.configs import get_config, list_configs
+    from repro.core.notation import A100_HBM_BYTES, from_model
+    for name in list_configs():
+        cfg = get_config(name)
+        p = min(8, _pow2_at_most(cfg.num_layers))
+        n = from_model(cfg, b=1, s=2048, B=128, p=p, t=4)
+        fast = plan_config(n, cfg, A100_HBM_BYTES)
+        full = plan_config(n, cfg, A100_HBM_BYTES, exhaustive=True)
+        _assert_same_recommendation(n, fast, full, name)
+
+
+def test_bound_is_admissible_for_simulated_rows():
+    """Every simulated candidate's MFU stays at or below the ideal-bound
+    it was priced with — the inequality the pruning rule needs."""
+    from repro.core import memory_model as MM
+    n = Notation(a=4, b=1, h=256, l=16, s=128, v=512, B=16, p=4, t=1)
+    cost = AnalyticCostModel()
+    hbm = 2.0 * MM.max_stage_bytes(n, "recompute", "1f1b")
+    cands = list(SP.enumerate_candidates(n, SearchSpace(vs=(2,))))
+    ranked = R.rank(n, cands, cost, hbm, workspace=0.0, exhaustive=True)
+    for rp in ranked:
+        if rp.makespan > 0:
+            bound = R.mfu_upper_bound(n, rp.cand, cost)
+            assert rp.mfu <= bound + 1e-12, (rp.cand, rp.mfu, bound)
+
+
+def test_compile_cache_stats_counts_hits_binds_and_evictions():
+    P.compile_plan.cache_clear()
+    P.compile_cache_stats(reset=True)
+    spec = P.ScheduleSpec("1f1b", 4, 16)
+    P.compile_plan(spec)
+    P.compile_plan(spec)
+    deep = P.ScheduleSpec("bpipe", 4, 16, depth=2)
+    P.compile_plan(deep)
+    stats = P.compile_cache_stats()
+    assert stats["hits"] == 1
+    # depth != 1 compiles via the depth-1 base: 2 misses for the deep
+    # spec (itself + its base), 1 recorded bind
+    assert stats["misses"] == 3 and stats["binds"] == 1
+    assert stats["size"] == 3 and stats["maxsize"] >= stats["size"]
+    # the deep schedule is the base with the spec swapped — same streams
+    assert P.compile_plan(deep).streams \
+        is P.compile_plan(P.ScheduleSpec("bpipe", 4, 16)).streams
+    assert P.compile_plan(deep).spec.depth == 2
