@@ -14,6 +14,7 @@ Prints ``name,...`` CSV rows:
   roofline           per-(arch x shape) roofline terms from the dry-run
   planner_sweep      schedule auto-planner over every registered config
   longcontext_sweep  sequence-sliced planner verdicts at 32k/128k
+  vocab_sweep        vocab-parallel verdicts on 151k- vs 32k-vocab configs
   obs_audit          sim-vs-real divergence audit on the paper shapes
 
 ``--smoke`` runs every benchmark on tiny CPU-only shapes (subset grids,
@@ -50,7 +51,7 @@ def main(argv=None) -> None:
     from benchmarks import (estimator_accuracy, interleaved_sweep,
                             kernel_bench, longcontext_sweep, memory_balance,
                             obs_audit, planner_sweep, residency_sweep,
-                            roofline_table, table3, table5)
+                            roofline_table, table3, table5, vocab_sweep)
     mods = {
         "table3": table3,
         "table5": table5,
@@ -62,6 +63,7 @@ def main(argv=None) -> None:
         "roofline": roofline_table,
         "planner_sweep": planner_sweep,
         "longcontext_sweep": longcontext_sweep,
+        "vocab_sweep": vocab_sweep,
         "obs_audit": obs_audit,
     }
     if args.only:

@@ -1,0 +1,127 @@
+"""Vocabulary-parallel planner sweep: does splitting the first/last-stage
+vocab spike change the verdict?
+
+For each case the planner runs twice over the SAME candidate axes — once
+restricted to the unscattered classic (vocab_parallel=1, exactly today's
+engine) and once with the vp ladder open — and the table shows what the
+scatter buys: the recommended plan, its simulated makespan/MFU, the
+per-stage peak bytes, and whether the recommendation itself moved
+(``verdict_changed``). Each case also prints the vp=1 memory *skew* row:
+stage-0 / middle / last-stage peak bytes under a reference 1f1b plan,
+with the vocab share (embedding state, LM-head state, fp32 logits) split
+out — the imbalance ``memory_model.vocab_bytes_per_stage`` makes
+visible and ``vocab_parallel`` makes plannable (docs/memory.md "Vocab
+accounting").
+
+Cases pair a 151k-vocab config (qwen3-14b) at HBM budgets where the
+spike gates feasibility against the paper's 32k-vocab control
+(llama-65b at A100-80G, where the verdict must NOT move). The
+paper-condition verdicts (Table 3) are untouched by design: the default
+``SearchSpace`` stays unscattered; this sweep is where the vp > 1 arm
+competes.
+
+Row order is pinned (plain list, declared case order) so
+``BENCH_smoke.json`` diffs stay stable.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from repro.core import memory_model as MM
+from repro.core.notation import Notation, from_model
+from repro.planner import SearchSpace, cost_model_for, plan_config, recommend
+
+#: (config name, HBM GiB, attention, vp ladder). Budgets picked where the
+#: 151k-vocab spike bites: 14 GiB = nothing unscattered fits (vp turns
+#: an infeasible config feasible), 16 GiB = vp unlocks a larger micro
+#: batch; llama-65b at 80 GiB is the 32k-vocab control (no change).
+CASES: Tuple[Tuple[str, float, str, Tuple[int, ...]], ...] = (
+    ("qwen3-14b", 14.0, "recompute", (1, 2, 4, 8)),
+    ("qwen3-14b", 16.0, "recompute", (1, 2, 4, 8)),
+    ("llama-65b", 80.0, "recompute", (1, 2, 4, 8)),
+)
+
+#: Smoke case rides the GPT-like Notation fallback with a deliberately
+#: out-sized vocab so the spike dominates at toy scale: the ~1.1 GiB
+#: table + 0.125 GiB logits sit on the boundary stages while blocks are
+#: ~0.05 GiB/stage. 5 GiB budget = the planner's 4 GiB workspace floor
+#: plus room for the scattered layout only — vp=1 must come back
+#: infeasible, the vp ladder feasible.
+SMOKE_N = Notation(a=4, b=1, h=256, l=16, s=128, v=262_144, B=16, p=4, t=1)
+SMOKE_CASES: Tuple[Tuple[str, float, Tuple[int, ...]], ...] = (
+    ("smoke-bigvocab", 5.0, (1, 2, 4)),
+)
+
+
+def _plan_cells(prefix: str, rp) -> str:
+    if rp is None:
+        return (f"{prefix}makespan=-,{prefix}mfu=-,{prefix}peak_gib=-,"
+                f"{prefix}plan=infeasible")
+    return (f"{prefix}makespan={rp.makespan:.4g},"
+            f"{prefix}mfu={100 * rp.mfu:.1f},"
+            f"{prefix}peak_gib={rp.feas.peak_gib:.2f},"
+            f"{prefix}plan={rp.cand.label().replace(' ', '/')}")
+
+
+def skew_row(n: Notation, cfg, attention: str) -> dict:
+    """Per-stage bytes of a reference unscattered 1f1b plan: the
+    boundary-stage vocab spike vs the middle of the pipeline."""
+    mems = MM.per_stage_memory(n, attention, "1f1b", cfg)
+    mid = n.p // 2
+    return {
+        "stage0_gib": mems[0].total / 2**30,
+        "mid_gib": mems[mid].total / 2**30,
+        "last_gib": mems[-1].total / 2**30,
+        "vocab0_gib": mems[0].vocab_bytes / 2**30,
+        "vocab_last_gib": mems[-1].vocab_bytes / 2**30,
+    }
+
+
+def sweep_case(name: str, n: Notation, cfg, hbm: float, attention: str,
+               vps: Tuple[int, ...], print_csv: bool = True) -> List[dict]:
+    cost = cost_model_for(cfg)
+    base = plan_config(n, cfg, hbm, cost=cost,
+                       search=SearchSpace(attentions=(attention,),
+                                          vocab_parallels=(1,)))
+    scattered = plan_config(n, cfg, hbm, cost=cost,
+                            search=SearchSpace(attentions=(attention,),
+                                               vocab_parallels=vps))
+    b_rp, s_rp = recommend(base, attention), recommend(scattered, attention)
+    changed = ((b_rp is None) != (s_rp is None)
+               or (b_rp is not None and s_rp is not None
+                   and b_rp.cand != s_rp.cand))
+    skew = skew_row(n, cfg, attention)
+    row = {"case": name, "hbm_gib": hbm / 2**30, "attention": attention,
+           "base": b_rp, "scattered": s_rp, "verdict_changed": changed,
+           **skew}
+    if print_csv:
+        print(f"vocab_sweep,{name},hbm_gib={hbm / 2**30:.0f},{attention},"
+              + _plan_cells("", s_rp) + "," + _plan_cells("base_", b_rp)
+              + f",verdict_changed={int(changed)}"
+              + f",stage0_gib={skew['stage0_gib']:.2f}"
+              + f",mid_gib={skew['mid_gib']:.2f}"
+              + f",last_gib={skew['last_gib']:.2f}"
+              + f",vocab0_gib={skew['vocab0_gib']:.2f}"
+              + f",vocab_last_gib={skew['vocab_last_gib']:.2f}")
+    return [row]
+
+
+def main(print_csv=True, smoke=False):
+    rows = []
+    if smoke:
+        for name, hbm_gib, vps in SMOKE_CASES:
+            rows += sweep_case(name, SMOKE_N, None, hbm_gib * 2**30,
+                               "recompute", vps, print_csv)
+        return rows
+    from repro.configs import get_config
+    for name, hbm_gib, attention, vps in CASES:
+        cfg = get_config(name)
+        n = from_model(cfg, b=1, s=2048, B=128, p=8, t=4)
+        rows += sweep_case(name, n, cfg, hbm_gib * 2**30, attention, vps,
+                           print_csv)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(smoke="--smoke" in sys.argv)

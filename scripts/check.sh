@@ -101,6 +101,15 @@ llama_out=$(PYTHONPATH=src python -m repro.launch.plan --config llama_65b \
     --top 0)
 grep -q 'PLAN llama-65b: 1f1b' <<< "$llama_out"
 
+# Vocab-parallel verdict (docs/memory.md "Vocab accounting"): at 14 GiB
+# the 151k-vocab qwen3-14b is infeasible unscattered — opening the vp
+# ladder must recover a vp=4 BPipe plan. The Table 3 greps above run
+# with the default (unscattered) space, so they double as the
+# vocab_parallel=1 no-change guard.
+qwen_out=$(PYTHONPATH=src python -m repro.launch.plan --config qwen3_14b \
+    --attention recompute --hbm-gb 14 --vocab-parallel 1 2 4 8 --top 0)
+grep -q 'PLAN qwen3-14b \[recompute\]: bpipe .*vp=4' <<< "$qwen_out"
+
 # Planner-speed gate: the branch-and-bound search must keep the FULL
 # 13-config sweep fast (the perf_opt this repo ships — see
 # docs/planner.md "Search performance"). Budget is generous vs the ~7s

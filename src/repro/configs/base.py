@@ -169,6 +169,15 @@ class ModelConfig:
         n_kv = max(1, min(self.num_kv_heads, n_heads))
         while n_heads % n_kv:
             n_kv -= 1
+        # Families with a decoupled head_dim (gemma2-style wide heads:
+        # head_dim != d_model/num_heads) keep their width *ratio* at
+        # smoke scale — rebinding to d_model//n_heads silently changed
+        # what shape family the smoke test exercises. Rounded to the
+        # nearest even width: RoPE splits the head in half.
+        head_dim = d_model // n_heads
+        if self.head_dim * self.num_heads != self.d_model:
+            ratio = self.head_dim * self.num_heads / self.d_model
+            head_dim = max(2, 2 * round(head_dim * ratio / 2))
         moe = None
         if self.moe is not None:
             moe = dataclasses.replace(
@@ -180,7 +189,7 @@ class ModelConfig:
             d_model=d_model,
             num_heads=n_heads,
             num_kv_heads=n_kv,
-            head_dim=d_model // n_heads,
+            head_dim=head_dim,
             d_ff=0 if self.d_ff == 0 else 2 * d_model,
             vocab_size=min(self.vocab_size, 512),
             rnn_width=0 if self.rnn_width == self.d_model else min(self.rnn_width, d_model),

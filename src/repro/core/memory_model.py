@@ -89,14 +89,97 @@ def sliced_unit_bytes(n: Notation, attention: str, v: int = 1,
     return base + (c - 1) * kv_bytes_per_slice(n, v, c)
 
 
-def param_bytes_per_stage(n: Notation, cfg: ModelConfig = None) -> float:
-    """Parameter + grad + optimizer bytes per device for one stage."""
+#: bf16 param + grad bytes/param for a TIED embedding table's far-stage
+#: replica: the fp32 master weight and Adam moments live with the
+#: stage-0 owner (Megatron keeps one optimizer copy of a tied table and
+#: all-reduces its grad), so the last stage pays only the working copy.
+TIED_REPLICA_BYTES_PER_PARAM = 4.0
+
+
+def vocab_param_count(n: Notation, cfg: ModelConfig = None) -> float:
+    """Total embedding + LM-head parameters across their copies (ONE
+    table when ``cfg.tie_embeddings``, two otherwise; the GPT-like
+    fallback assumes untied like its historical ``2vh`` term). This is
+    the share ``param_bytes_per_stage`` no longer spreads uniformly —
+    ``vocab_bytes_per_stage`` charges it to the stages that hold it."""
     if cfg is not None:
-        params = cfg.param_count() / n.p / n.t
+        return float(cfg.vocab_size) * cfg.d_model \
+            * (1 if cfg.tie_embeddings else 2)
+    return 2.0 * n.v * n.h
+
+
+def param_bytes_per_stage(n: Notation, cfg: ModelConfig = None) -> float:
+    """Parameter + grad + optimizer bytes per device for one stage's
+    transformer *blocks*. Embedding/LM-head state is NOT in here: it
+    lives on the boundary stages (stage 0 / stage p-1), which the old
+    uniform ``param_count()/p`` spread hid — ``vocab_bytes_per_stage``
+    charges it where it sits."""
+    if cfg is not None:
+        params = (cfg.param_count() - vocab_param_count(n, cfg)) / n.p / n.t
     else:
-        # GPT-like: 12 l h^2 block params + embeddings on first/last stage
-        params = (12.0 * n.l * n.h**2 / n.p + 2 * n.v * n.h / n.p) / n.t
+        # GPT-like: 12 l h^2 block params, evenly striped over stages
+        params = 12.0 * n.l * n.h**2 / (n.p * n.t)
     return params * BYTES_PER_PARAM
+
+
+def logits_bytes(n: Notation) -> float:
+    """The fp32 ``(b, s/t, v)`` logits tensor ``models/model.py``
+    materializes for the cross-entropy (``loss_fn``'s
+    ``logits.astype(float32)``) — a last-stage activation spike the
+    34sbh/t stash accounting never sees. Charged as ONE live copy: the
+    bf16 projection is transient and the softmax/logsumexp reductions
+    happen in place along the vocab dim."""
+    return 4.0 * n.b * n.s * n.v / n.t
+
+
+def vocab_bytes_per_stage(n: Notation, cfg: ModelConfig = None,
+                          vocab_parallel: int = 1) -> List[float]:
+    """Per-stage embedding / LM-head / logits bytes — the first/last
+    stage vocab spike, made visible (and splittable).
+
+    Layout at ``vocab_parallel=1``: stage 0 holds the embedding table's
+    full param+grad+optimizer state; stage p-1 holds the LM head's (a
+    bf16 param+grad replica only when the table is tied — see
+    ``TIED_REPLICA_BYTES_PER_PARAM``) plus the fp32 logits activation.
+    ``p == 1`` stacks everything on the single stage (a tied table is
+    one tensor, charged once).
+
+    ``vocab_parallel=vp > 1`` (arxiv 2411.05288 direction) scatters the
+    table's vocab rows over the FIRST vp stages and the head's rows +
+    the logits shards over the LAST vp stages, 1/vp each; overlapping
+    ranges simply add. The traffic this buys back is priced by
+    ``vocab_collective_bytes`` / the simulator's boundary charge."""
+    p = n.p
+    tied = cfg.tie_embeddings if cfg is not None else False
+    table = (float(cfg.vocab_size) * cfg.d_model if cfg is not None
+             else float(n.v) * n.h) / n.t
+    state = table * BYTES_PER_PARAM
+    out = [0.0] * p
+    if p == 1:
+        out[0] = state + (0.0 if tied else state) + logits_bytes(n)
+        return out
+    vp = max(1, min(vocab_parallel, p))
+    head_state = table * TIED_REPLICA_BYTES_PER_PARAM if tied else state
+    for i in range(vp):
+        out[i] += state / vp
+    for i in range(p - vp, p):
+        out[i] += (head_state + logits_bytes(n)) / vp
+    return out
+
+
+def vocab_collective_bytes(n: Notation, vocab_parallel: int = 1) -> float:
+    """Link bytes ONE vocab-parallel collective moves per participating
+    rank: a ring all-reduce/gather of the bf16 ``(b, s, h)`` boundary
+    activation over vp ranks costs ``2(vp-1)/vp`` times the tensor
+    (2sbh/t bytes). The embedding side pays one per microbatch forward
+    (partial-lookup all-reduce), the head side one per forward (input
+    gather) and one per backward (input-grad reduce-scatter); the
+    simulator prices them symmetrically on boundary-stage F/B. 0 at
+    ``vocab_parallel <= 1`` — no scatter, no collective."""
+    vp = vocab_parallel
+    if vp <= 1:
+        return 0.0
+    return 2.0 * (vp - 1) / vp * 2.0 * n.s * n.b * n.h / n.t
 
 
 @dataclasses.dataclass
@@ -106,10 +189,11 @@ class StageMemory:
     act_bytes: float
     param_bytes: float
     host_bytes: float = 0.0   # host-DRAM bytes at peak (host_offload)
+    vocab_bytes: float = 0.0  # embedding/head state + fp32 logits share
 
     @property
     def total(self) -> float:
-        return self.act_bytes + self.param_bytes
+        return self.act_bytes + self.param_bytes + self.vocab_bytes
 
 
 def per_stage_memory(n: Notation, attention: str, kind: KindOrSpec,
@@ -156,6 +240,7 @@ def per_stage_memory(n: Notation, attention: str, kind: KindOrSpec,
         if pol.mechanism == "recompute":
             retained += kv_bytes_per_slice(n, spec.v, c)
     pb = param_bytes_per_stage(n, cfg)
+    vb = vocab_bytes_per_stage(n, cfg, spec.vocab_parallel)
     out = []
     for i in range(n.p):
         spill = spilled.get(i, 0)
@@ -165,7 +250,8 @@ def per_stage_memory(n: Notation, attention: str, kind: KindOrSpec,
             stage=i, peak_stash=peaks[i],
             act_bytes=(peaks[i] + inflight) * per_mb + spill * retained,
             param_bytes=pb,
-            host_bytes=spill * per_mb if pol.mechanism == "host" else 0.0))
+            host_bytes=spill * per_mb if pol.mechanism == "host" else 0.0,
+            vocab_bytes=vb[i]))
     return out
 
 
@@ -216,18 +302,24 @@ def eviction_bytes(n: Notation, attention: str, v: int = 1,
 
 
 def traffic_bytes(n: Notation, attention: str, spec: P.ScheduleSpec) -> float:
-    """Total residency bytes one step of ``spec`` moves over a link: the
-    release+restore count of the stream actually built
-    (``plan.num_moves`` — cap-, v- and residency-aware) times the
+    """Total link bytes one step of ``spec`` moves.
+
+    Residency part: the release+restore count of the stream actually
+    built (``plan.num_moves`` — cap-, v- and residency-aware) times the
     per-unit stash bytes. Covers the partner swap (evictor<->acceptor)
     and host offload (D2H+H2D) alike; 0 when residency moves no data
     (none, or selective_recompute — whose bill is FLOPs, priced by the
-    simulator's RECOMPUTE handler)."""
+    simulator's RECOMPUTE handler).
+
+    Vocab-parallel part: four boundary collectives per microbatch (F+B
+    on each of the two boundary stages — ``vocab_collective_bytes``);
+    0 at ``vocab_parallel=1``."""
     spec = _as_spec(spec, n)
-    if not spec.policy.moves_data:
-        return 0.0
-    return P.num_moves(spec) * eviction_bytes(n, attention, spec.v,
-                                              spec.seq_chunks)
+    total = 4.0 * spec.m * vocab_collective_bytes(n, spec.vocab_parallel)
+    if spec.policy.moves_data:
+        total += P.num_moves(spec) * eviction_bytes(n, attention, spec.v,
+                                                    spec.seq_chunks)
+    return total
 
 
 def balance_report(n: Notation, attention: str) -> Dict[str, List[float]]:

@@ -88,6 +88,20 @@ class ScheduleSpec:
             Normalized to 1 for kinds without a sliced builder
             (``ScheduleKind.sliced`` — interleaved kinds cannot slice).
             ``seq_chunks=1`` is bit-identical to the unsliced engine.
+      vocab_parallel: vocabulary-parallel degree (docs/memory.md "Vocab
+            accounting"; arxiv 2411.05288 direction). ``vocab_parallel=
+            vp > 1`` scatters the embedding table over the first vp
+            stages and the LM head + fp32 logits over the last vp
+            stages, trading the boundary-stage vocab memory spike for
+            per-microbatch all-reduce/gather traffic on the boundary
+            stages' F/B. Like ``depth``, a *pricing* dimension: the
+            compiled streams and peak-stash accounting are those of the
+            vp=1 structural twin (re-bound, never re-compiled); only
+            the memory model's ``vocab_bytes`` split and the
+            simulator's boundary-collective charge read it. Must
+            satisfy ``1 <= vp <= p``; normalized to 1 when p == 1
+            (nothing to scatter over). ``vocab_parallel=1`` is
+            bit-identical to the unscattered engine.
 
     Specs are frozen and hashable — they key the compile cache and can be
     used as dict keys / set members anywhere a "schedule variant" is
@@ -101,6 +115,7 @@ class ScheduleSpec:
     residency: str = "none"
     depth: int = 1
     seq_chunks: int = 1
+    vocab_parallel: int = 1
 
     def __post_init__(self):
         entry = sched.SCHEDULES.get(self.kind)
@@ -172,6 +187,16 @@ class ScheduleSpec:
                     object.__setattr__(self, "cap", None)
         else:
             object.__setattr__(self, "cap", None)
+        if self.vocab_parallel < 1:
+            raise ValueError(
+                f"vocab_parallel must be >= 1, got {self.vocab_parallel}")
+        if self.p == 1:
+            # a single stage holds everything; nothing to scatter over
+            object.__setattr__(self, "vocab_parallel", 1)
+        elif self.vocab_parallel > self.p:
+            raise ValueError(
+                f"vocab_parallel={self.vocab_parallel} > p={self.p}: "
+                f"vocab shards scatter over pipeline stages")
         if self.depth < 1:
             raise ValueError(f"depth must be >= 1, got {self.depth}")
         if not (entry.balanced or pol.moves_data):
@@ -239,18 +264,21 @@ class ScheduleSpec:
             bits.append(f"depth={self.depth}")
         if self.seq_chunks != 1:
             bits.append(f"c={self.seq_chunks}")
+        if self.vocab_parallel != 1:
+            bits.append(f"vp={self.vocab_parallel}")
         return " ".join(bits)
 
     def to_dict(self) -> Dict[str, Any]:
         return {"kind": self.kind, "p": self.p, "m": self.m,
                 "v": self.v, "cap": self.cap, "residency": self.residency,
-                "depth": self.depth, "seq_chunks": self.seq_chunks}
+                "depth": self.depth, "seq_chunks": self.seq_chunks,
+                "vocab_parallel": self.vocab_parallel}
 
     #: Exactly the keys ``to_dict`` emits — ``from_dict`` rejects anything
     #: else so a typo'd or stale spec JSON fails loudly instead of
     #: silently dropping a dimension.
     DICT_KEYS = frozenset(("kind", "p", "m", "v", "cap", "residency",
-                           "depth", "seq_chunks"))
+                           "depth", "seq_chunks", "vocab_parallel"))
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "ScheduleSpec":
@@ -264,7 +292,8 @@ class ScheduleSpec:
                    cap=None if d.get("cap") is None else int(d["cap"]),
                    residency=str(d.get("residency", "none")),
                    depth=int(d.get("depth", 1)),
-                   seq_chunks=int(d.get("seq_chunks", 1)))
+                   seq_chunks=int(d.get("seq_chunks", 1)),
+                   vocab_parallel=int(d.get("vocab_parallel", 1)))
 
 
 # ---------------------------------------------------------------------------
@@ -490,12 +519,14 @@ def compile_plan(spec: ScheduleSpec) -> Schedule:
     LRU) — the planner's feasibility pass, the simulator, and the
     executor all share one compilation per variant.
 
-    ``depth`` is a *pricing* dimension: it changes what the simulator
-    charges and what the executor keeps in flight, never the compiled
-    streams or peak accounting. Specs that differ only in depth
-    therefore share one structural compilation — the depth-1 artifact is
-    compiled once and re-bound (``dataclasses.replace`` of the spec
-    field) per depth, so a planner depth ladder costs one compile."""
+    ``depth`` and ``vocab_parallel`` are *pricing* dimensions: they
+    change what the simulator charges (and what the executor keeps in
+    flight / how vocab shards lay out), never the compiled streams or
+    peak-stash accounting. Specs that differ only in those knobs
+    therefore share one structural compilation — the depth-1/vp-1
+    artifact is compiled once and re-bound (``dataclasses.replace`` of
+    the spec field) per knob setting, so a planner depth or
+    vocab-parallel ladder costs one compile."""
     cached = _COMPILE_CACHE.get(spec)
     if cached is not None:
         _COMPILE_STATS["hits"] += 1
@@ -505,8 +536,9 @@ def compile_plan(spec: ScheduleSpec) -> Schedule:
         _COMPILE_CACHE[spec] = cached
         return cached
     _COMPILE_STATS["misses"] += 1
-    if spec.depth != 1:
-        base = compile_plan(dataclasses.replace(spec, depth=1))
+    if spec.depth != 1 or spec.vocab_parallel != 1:
+        base = compile_plan(dataclasses.replace(spec, depth=1,
+                                                vocab_parallel=1))
         _COMPILE_STATS["binds"] += 1
         sch = dataclasses.replace(base, spec=spec)
     else:

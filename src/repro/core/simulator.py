@@ -69,6 +69,9 @@ class SimConfig:
     pair_hops: int = 1
     d2h_bw: float = float("inf")   # host link, device -> host (OFFLOAD)
     h2d_bw: float = float("inf")   # host link, host -> device (FETCH)
+    t_vocab: float = 0.0        # vocab-parallel collective per boundary
+                                # F/B (memory_model.vocab_collective_bytes
+                                # / link bw; 0 at vocab_parallel=1)
     kind: str = "1f1b"
     v: int = 2                  # chunks per device (interleaved kinds only)
     cap: Optional[int] = None   # stash-cap override (balanced / residency)
@@ -107,6 +110,8 @@ class SimResult:
                                 # for swap/host moves, re-forward time for
                                 # recompute) — the overhead exposure that
                                 # breaks equal-makespan ties in the planner
+    vocab_time: float = 0.0     # summed vocab-parallel collective time
+                                # charged on boundary-stage F/B
     channels: Dict[tuple, ChannelStats] = dataclasses.field(
         default_factory=dict)   # per-channel occupancy (transfer engine)
 
@@ -137,6 +142,13 @@ def _simulate(cfg: SimConfig, greedy: bool = True,
     # the linear part.)
     c = spec.seq_chunks
     tf, tb = cfg.Tf / (v * c), cfg.Tb / (v * c)
+    # Vocab-parallel collectives (spec.vocab_parallel > 1) ride the
+    # boundary stages' compute frontier: every F and B of the first and
+    # last *virtual* stage pays one all-reduce/gather of the (sliced)
+    # boundary activation — cfg.t_vocab seconds, 1/c of it per slice.
+    # The guard keeps the vp=1 hot path's arithmetic untouched.
+    nv = p * v
+    tvoc = cfg.t_vocab / c if cfg.t_vocab else 0.0
     t_move = (cfg.evict_bytes / cfg.pair_bw) * cfg.pair_hops \
         if cfg.evict_bytes else 0.0
     t_d2h = cfg.evict_bytes / cfg.d2h_bw if cfg.evict_bytes else 0.0
@@ -152,7 +164,7 @@ def _simulate(cfg: SimConfig, greedy: bool = True,
     t_stage = {i: 0.0 for i in range(p)}    # stage compute frontier
     done: Dict[P.DepKey, float] = {}    # (op, stage, mb, chunk, sl) -> end
     busy = {i: 0.0 for i in range(p)}
-    state = {"stall": 0.0, "last_b": 0.0, "move": 0.0}
+    state = {"stall": 0.0, "last_b": 0.0, "move": 0.0, "vocab": 0.0}
     timeline: Dict[int, List] = {i: [] for i in range(p)}
 
     def finish(i, ins, start_t, end_t):
@@ -173,9 +185,13 @@ def _simulate(cfg: SimConfig, greedy: bool = True,
                 return P.BLOCKED
         hop = cfg.t_p2p if ins.dep_hop else 0.0
         start_t = max(t_stage[i], dep + hop)
-        end_t = start_t + tf
+        dt = tf
+        if tvoc and (ins.vs == 0 or ins.vs == nv - 1):
+            dt = tf + tvoc
+            state["vocab"] += tvoc
+        end_t = start_t + dt
         done[ins.done_key] = end_t
-        busy[i] += tf
+        busy[i] += dt
         t_stage[i] = end_t
         finish(i, ins, start_t, end_t)
 
@@ -190,10 +206,14 @@ def _simulate(cfg: SimConfig, greedy: bool = True,
             if le is not None and le > start_t:
                 state["stall"] += le - start_t
                 start_t = le
-        end_t = start_t + tb
+        dt = tb
+        if tvoc and (ins.vs == 0 or ins.vs == nv - 1):
+            dt = tb + tvoc
+            state["vocab"] += tvoc
+        end_t = start_t + dt
         done[ins.done_key] = end_t
         state["last_b"] = max(state["last_b"], end_t)
-        busy[i] += tb
+        busy[i] += dt
         t_stage[i] = end_t
         finish(i, ins, start_t, end_t)
 
@@ -273,7 +293,8 @@ def _simulate(cfg: SimConfig, greedy: bool = True,
     return SimResult(makespan=makespan,
                      busy=[busy[i] for i in range(p)],
                      load_stall=state["stall"], timeline=timeline,
-                     move_time=state["move"], channels=engine.stats())
+                     move_time=state["move"], vocab_time=state["vocab"],
+                     channels=engine.stats())
 
 
 # Public entry point. The dispatch loop itself lives in ``plan.run`` —

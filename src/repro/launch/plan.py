@@ -74,6 +74,13 @@ def main(argv=None):
                          "--seq-chunks 1 2 4 (docs/longcontext.md; c > 1 "
                          "only on kinds with a sliced builder and seq "
                          "lengths c divides; default: unsliced only)")
+    ap.add_argument("--vocab-parallel", type=int, nargs="*", default=[1],
+                    help="vocab-parallel degrees to search, e.g. "
+                         "--vocab-parallel 1 2 4 (docs/memory.md 'Vocab "
+                         "accounting'; vp > 1 scatters the embedding/head/"
+                         "logits spike over vp boundary stages for "
+                         "per-microbatch collective traffic; degrees > p "
+                         "are skipped; default: unscattered only)")
     ap.add_argument("--overhead", type=float, default=0.0,
                     help="fractional BPipe overhead inflating break-even")
     ap.add_argument("--exhaustive", action="store_true",
@@ -132,7 +139,8 @@ def main(argv=None):
         kw["residencies"] = tuple(args.residency)
     search = SearchSpace(attentions=attentions, vs=tuple(args.v),
                          depths=tuple(args.depth),
-                         seq_chunkses=tuple(args.seq_chunks), **kw)
+                         seq_chunkses=tuple(args.seq_chunks),
+                         vocab_parallels=tuple(args.vocab_parallel), **kw)
 
     if args.trace:
         events = calibrate.load_chrome_trace(args.trace)

@@ -105,6 +105,9 @@ def loss_fn(params, batch, cfg: ModelConfig, *, remat="none"):
     labels = batch["labels"]
     mask = (labels >= 0).astype(jnp.float32)
     labels = jnp.maximum(labels, 0)
+    # This fp32 (b, s/t, v) cast is the last-stage memory spike
+    # memory_model.logits_bytes charges (docs/memory.md "Vocab
+    # accounting") — at 151k vocab it rivals a whole stage's stash.
     lf = logits.astype(jnp.float32)
     if cfg.fused_xent:
         lse = jax.nn.logsumexp(lf, axis=-1)

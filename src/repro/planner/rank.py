@@ -173,7 +173,9 @@ def sim_config_for(n: Notation, rp: "RankedPlan", cost: CostModel,
                                        spec.seq_chunks)
                      if spec.policy.moves_data else 0.0),
         pair_bw=link_bw, pair_hops=max(rp.feas.pair_hops, 1),
-        d2h_bw=hb, h2d_bw=hb)
+        d2h_bw=hb, h2d_bw=hb,
+        t_vocab=(mm.vocab_collective_bytes(nb, spec.vocab_parallel)
+                 / link_bw))
 
 
 @dataclasses.dataclass
@@ -215,15 +217,20 @@ VERDICT_ORDER = {"ok": 0, "reject": 1, "pruned": 2, "infeasible": 3}
 PRUNE_MARGIN = 1e-9
 
 
-def mfu_upper_bound(n: Notation, cand: Candidate, cost: CostModel) -> float:
+def mfu_upper_bound(n: Notation, cand: Candidate, cost: CostModel,
+                    link_bw: float = NVLINK_BW) -> float:
     """Admissible MFU upper bound for ``cand`` priced from the cost model
     alone (no compile, no simulation): the kind-appropriate ideal
     makespan — ``(m + ramp) * T`` with the plain (p-1), interleaved
     (p-1)/v, or sliced (p-1)/c ramp (``simulator.ideal_makespan``
-    family) — converted to MFU. The simulator can only ADD time to the
-    ideal (hops, stalls, recompute, warmup skew), so simulated MFU never
-    exceeds this bound; a candidate whose bound cannot beat the incumbent
-    best MFU cannot be the recommendation."""
+    family) — converted to MFU. A vocab-parallel candidate additionally
+    serializes one collective onto each boundary-stage F and B, so its
+    makespan floor gains ``2 m t_vocab`` (the boundary stage alone must
+    run m microbatches, each inflated by two collectives, after the
+    ramp). The simulator can only ADD time to the ideal (hops, stalls,
+    recompute, warmup skew), so simulated MFU never exceeds this bound;
+    a candidate whose bound cannot beat the incumbent best MFU cannot be
+    the recommendation."""
     nb = n.replace(b=cand.b)
     T = cost.stage_T(nb, cand.attention)
     entry = sched.SCHEDULES[cand.kind]
@@ -234,6 +241,9 @@ def mfu_upper_bound(n: Notation, cand: Candidate, cost: CostModel) -> float:
     else:
         ramp = n.p - 1
     lb = (cand.m + ramp) * T
+    if cand.vocab_parallel > 1:
+        t_vocab = mm.vocab_collective_bytes(nb, cand.vocab_parallel) / link_bw
+        lb += cand.m * 2.0 * t_vocab
     return cost.full_flops(n) / (lb * n.p * n.t * cost.peak_per_chip)
 
 
@@ -434,7 +444,8 @@ def _rank_arm(n: Notation, arm: List[RankedPlan], cost: CostModel,
         key = rp.cand
         b = bound_cache.get(key)
         if b is None:
-            b = bound_cache[key] = mfu_upper_bound(n, rp.cand, cost)
+            b = bound_cache[key] = mfu_upper_bound(n, rp.cand, cost,
+                                                   link_bw)
         rp.mfu_bound = b
         return b
 
@@ -493,7 +504,8 @@ def _rank_arm(n: Notation, arm: List[RankedPlan], cost: CostModel,
             rp.note = (f"ideal-bound {bound(rp) * 100:.2f}% MFU "
                        f"< incumbent {incumbent * 100:.2f}%")
             continue
-        twin_key = (c.kind, c.b, c.v, c.cap, c.residency, c.seq_chunks)
+        twin_key = (c.kind, c.b, c.v, c.cap, c.residency, c.seq_chunks,
+                    c.vocab_parallel)
         twin = stall_free.get(twin_key)
         if twin is not None and twin.cand.depth < c.depth:
             # Zero-stall dominance: deeper overlap can only start moves

@@ -13,7 +13,7 @@ from repro.core import schedule as sched
 from repro.core.notation import Notation
 from repro.planner.rank import RankedPlan, arms_of, recommend
 
-_COLS = ("#", "kind", "res", "v", "c", "b", "m", "cap", "d", "attn",
+_COLS = ("#", "kind", "res", "v", "c", "vp", "b", "m", "cap", "d", "attn",
          "peak_GiB", "makespan_s", "MFU%", "bubble%", "stall", "eq3%",
          "req_gain", "got_gain", "moves", "verdict")
 
@@ -41,6 +41,9 @@ def _cell(p: RankedPlan, col: str, idx: int) -> str:
     if col == "c":
         # sequence slices per microbatch (docs/longcontext.md)
         return str(c.seq_chunks) if c.seq_chunks != 1 else "-"
+    if col == "vp":
+        # vocab-parallel degree (docs/memory.md "Vocab accounting")
+        return str(c.vocab_parallel) if c.vocab_parallel != 1 else "-"
     if col == "b":
         return str(c.b)
     if col == "m":
@@ -101,7 +104,8 @@ def csv_rows(ranked: List[RankedPlan], tag: str, config: str) -> List[str]:
         c = p.cand
         out.append(
             f"{tag},{config},rank={i + 1},kind={c.kind},"
-            f"res={c.residency},v={c.v},c={c.seq_chunks},b={c.b},"
+            f"res={c.residency},v={c.v},c={c.seq_chunks},"
+            f"vp={c.vocab_parallel},b={c.b},"
             f"m={c.m},cap={c.cap if c.cap is not None else 'def'},"
             f"depth={c.depth},"
             f"attn={c.attention},peak_gib={p.feas.peak_gib:.2f},"
@@ -133,6 +137,8 @@ def recommendation_line(config: str, ranked: List[RankedPlan],
         bits.append(f"cap={c.cap if c.cap is not None else 'default'}")
     if c.depth != 1:
         bits.append(f"depth={c.depth}")
+    if c.vocab_parallel != 1:
+        bits.append(f"vp={c.vocab_parallel}")
     if attention is None:
         bits.append(c.attention)
     why = f"est {100 * best.mfu:.1f}% MFU"

@@ -53,12 +53,14 @@ class Candidate:
     residency: str = "none"
     depth: int = 1
     seq_chunks: int = 1
+    vocab_parallel: int = 1
 
     def spec(self, p: int) -> P.ScheduleSpec:
         """The candidate's schedule variant on a p-stage pipeline."""
         return P.ScheduleSpec(self.kind, p, self.m, v=self.v, cap=self.cap,
                               residency=self.residency, depth=self.depth,
-                              seq_chunks=self.seq_chunks)
+                              seq_chunks=self.seq_chunks,
+                              vocab_parallel=self.vocab_parallel)
 
     def label(self) -> str:
         bits = [self.kind, f"b={self.b}", f"m={self.m}"]
@@ -66,6 +68,8 @@ class Candidate:
             bits.append(f"v={self.v}")
         if self.seq_chunks != 1:
             bits.append(f"c={self.seq_chunks}")
+        if self.vocab_parallel != 1:
+            bits.append(f"vp={self.vocab_parallel}")
         if self.residency not in ("none", "bpipe_swap"):
             bits.append(f"res={self.residency}")
         if self.cap is not None:
@@ -105,6 +109,14 @@ class SearchSpace:
     # only to kinds with a sliced builder (``ScheduleKind.sliced``) and
     # to sequence lengths c divides; 1 first so ties resolve unsliced.
     seq_chunkses: Tuple[int, ...] = (1,)
+    # Vocabulary-parallel degrees (docs/memory.md "Vocab accounting"):
+    # vp > 1 scatters the embedding/head/logits spike over vp boundary
+    # stages for per-microbatch collective traffic. Opt-in like
+    # seq_chunkses — the default searches only the unscattered classic
+    # so the paper-condition verdicts (Table 3) are untouched; large-
+    # vocab sweeps pass e.g. (1, 2, 4). vp is clamped to vp <= p at
+    # enumeration; 1 first so ties resolve unscattered.
+    vocab_parallels: Tuple[int, ...] = (1,)
 
 
 def micro_batch_sizes(B: int, max_b: int = 0) -> List[int]:
@@ -161,6 +173,9 @@ def enumerate_candidates(n: Notation, space: SearchSpace = SearchSpace(),
     (attention arms x kinds x residencies x b x v x cap). ``num_layers``
     (0 = skip the check) bounds p*v for interleaved kinds."""
     p = n.p
+    # vocab-parallel degrees scatter over pipeline stages, so vp > p is
+    # structurally meaningless (the spec would reject it)
+    vps = [vp for vp in space.vocab_parallels if 1 <= vp <= p] or [1]
     for attention in space.attentions:
         for b in micro_batch_sizes(n.B, space.max_b):
             m = n.B // b
@@ -182,7 +197,7 @@ def enumerate_candidates(n: Notation, space: SearchSpace = SearchSpace(),
                     chunkses = [c for c in space.seq_chunkses
                                 if c == 1 or (entry.sliced
                                               and n.s % c == 0)]
-                    for c in chunkses:
+                    for c, vp in ((c, vp) for c in chunkses for vp in vps):
                         if entry.balanced:
                             # balanced kinds ARE the swap policy; the cap
                             # ladder is theirs, and each cap opens the
@@ -195,7 +210,8 @@ def enumerate_candidates(n: Notation, space: SearchSpace = SearchSpace(),
                                                     attention=attention,
                                                     residency="bpipe_swap",
                                                     depth=depth,
-                                                    seq_chunks=c)
+                                                    seq_chunks=c,
+                                                    vocab_parallel=vp)
                             continue
                         for residency in space.residencies:
                             pol = respol.POLICIES.get(residency)
@@ -215,4 +231,5 @@ def enumerate_candidates(n: Notation, space: SearchSpace = SearchSpace(),
                                                     attention=attention,
                                                     residency=residency,
                                                     depth=depth,
-                                                    seq_chunks=c)
+                                                    seq_chunks=c,
+                                                    vocab_parallel=vp)

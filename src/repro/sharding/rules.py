@@ -63,6 +63,50 @@ _PARAM_RULES = {
 # Experts-leading MoE weights override by ndim: (E, d, f)/(E, f, d)
 _MOE_3D = {"wi": (M, None, None), "wg": (M, None, None), "wo": (M, None, None)}
 
+# ---------------------------------------------------------------------------
+# Vocabulary-parallel stage scatter (docs/memory.md "Vocab accounting")
+# ---------------------------------------------------------------------------
+# The mesh has no pipeline axis (stages are separate jit programs), so
+# scattering the embedding table / LM head over pipeline stages is a
+# per-stage ROW RANGE plus a within-shard PartitionSpec. With the vocab
+# dim consumed by the stage scatter, the tensor-parallel "model" axis
+# moves to the other (d_model) dim — the vp=1 rules above keep it on
+# vocab.
+_VOCAB_STAGE_RULES = {
+    "table": (None, M),          # (vocab/vp, d): stage-scattered rows
+    "unembed": (M, None),        # (d, vocab/vp): stage-scattered cols
+}
+
+
+def vocab_shard_range(stage: int, p: int, vocab_parallel: int, vocab: int,
+                      side: str = "embed") -> Tuple[int, int]:
+    """Vocab row range ``[lo, hi)`` stage ``stage`` holds of the
+    embedding table (``side="embed"`` — scattered over the FIRST vp
+    stages) or the LM head (``side="head"`` — over the LAST vp stages).
+    ``(0, 0)`` for non-participating stages; the ranges of the
+    participating stages tile ``[0, vocab)`` exactly. At
+    ``vocab_parallel=1`` the owner stage holds every row — the classic
+    boundary-stage layout the memory model charges."""
+    if side not in ("embed", "head"):
+        raise ValueError(f"side must be 'embed' or 'head', got {side!r}")
+    vp = max(1, min(vocab_parallel, p))
+    r = stage if side == "embed" else stage - (p - vp)
+    if not 0 <= r < vp:
+        return (0, 0)
+    return (r * vocab // vp, (r + 1) * vocab // vp)
+
+
+def vocab_param_spec(name: str, vocab_parallel: int = 1) -> P:
+    """Within-shard PartitionSpec for ``table``/``unembed`` under a
+    vocab-parallel stage scatter: vp > 1 hands the vocab dim to the
+    stage scatter and moves the "model" axis to the d_model dim."""
+    if name not in _VOCAB_STAGE_RULES:
+        raise KeyError(f"no vocab rule for {name!r}; "
+                       f"known: {sorted(_VOCAB_STAGE_RULES)}")
+    rule = (_VOCAB_STAGE_RULES if vocab_parallel > 1
+            else _PARAM_RULES)[name]
+    return P(*rule)
+
 
 def _leaf_name(path) -> str:
     for entry in reversed(path):

@@ -1,0 +1,324 @@
+"""Vocabulary accounting + the vocab_parallel plan dimension.
+
+The bugfix this pins: embedding/LM-head param+grad+optimizer state and
+the fp32 logits tensor are charged to the stages that HOLD them (stage 0
+/ stage p-1), not uniformly spread over the pipeline — and the planner
+can then scatter that spike over boundary stages (``vocab_parallel``,
+docs/memory.md "Vocab accounting") and have the split priced end to end
+(memory model, simulator, branch-and-bound bound).
+"""
+import dataclasses
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import memory_model as MM
+from repro.core import plan as P
+from repro.core import simulator as SIM
+from repro.core.notation import A100_HBM_BYTES, Notation, from_model
+from repro.planner import (AnalyticCostModel, SearchSpace, cost_model_for,
+                           plan_config, recommend)
+from repro.planner import rank as R
+from repro.planner import space as SP
+from repro.sharding import rules
+
+
+def _paper_shape(name):
+    cfg = get_config(name)
+    return cfg, from_model(cfg, b=1, s=2048, B=128, p=8, t=4)
+
+
+# ---------------------------------------------------------------------------
+# Memory accounting: the spike sits on the boundary stages
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["qwen3-14b", "llama-65b"])
+def test_boundary_stages_carry_the_vocab_spike(name):
+    cfg, n = _paper_shape(name)
+    mems = MM.per_stage_memory(n, "recompute", "1f1b", cfg)
+    mid = n.p // 2
+    # middle stages carry blocks only
+    assert mems[mid].vocab_bytes == 0.0
+    # stage 0: the embedding table's full optimizer state
+    table = cfg.vocab_size * cfg.d_model / n.t
+    assert mems[0].vocab_bytes == pytest.approx(table * MM.BYTES_PER_PARAM)
+    # stage p-1: the (untied) head state plus the fp32 logits
+    assert mems[-1].vocab_bytes == pytest.approx(
+        table * MM.BYTES_PER_PARAM + MM.logits_bytes(n))
+    # and the spike is real memory: stage 0 (which already stashes the
+    # most under 1F1B) now also carries the table's optimizer state
+    assert mems[0].total > mems[mid].total
+    # total includes the vocab share — the field isn't decorative
+    assert mems[0].total == pytest.approx(
+        mems[0].act_bytes + mems[0].param_bytes + mems[0].vocab_bytes)
+
+
+def test_qwen3_vocab_spike_dwarfs_llama_control():
+    """151k-vocab qwen3 vs the paper's 32k-vocab llama-65b: relative to
+    a middle stage's bill, the spike only bites on the big vocab."""
+    ratios = {}
+    for name in ("qwen3-14b", "llama-65b"):
+        cfg, n = _paper_shape(name)
+        mems = MM.per_stage_memory(n, "recompute", "1f1b", cfg)
+        ratios[name] = mems[0].vocab_bytes / mems[n.p // 2].total
+    assert ratios["qwen3-14b"] > 3 * ratios["llama-65b"]
+
+
+def test_vocab_parallel_scatters_the_spike():
+    cfg, n = _paper_shape("qwen3-14b")
+    base = MM.vocab_bytes_per_stage(n, cfg, 1)
+    for vp in (2, 4, 8):
+        vb = MM.vocab_bytes_per_stage(n, cfg, vp)
+        # conservation: scattering relocates state, never changes the sum
+        assert sum(vb) == pytest.approx(sum(base))
+        if 2 * vp <= n.p:
+            # disjoint ranges: each participant holds 1/vp of its side
+            assert vb[0] == pytest.approx(base[0] / vp)
+            assert vb[-1] == pytest.approx(base[-1] / vp)
+        if vp == n.p:
+            # full overlap: a perfectly even spread
+            for x in vb:
+                assert x == pytest.approx(sum(base) / vp)
+        # non-participants hold nothing (a middle gap exists while the
+        # first-vp and last-vp ranges don't meet)
+        if 2 * vp < n.p:
+            assert vb[n.p // 2] == 0.0
+
+
+def test_param_bytes_exclude_vocab_both_paths():
+    """The fixed bug: blocks-only param bytes in the cfg path AND the
+    GPT-like fallback — the vocab share moved to vocab_bytes_per_stage."""
+    cfg, n = _paper_shape("qwen3-14b")
+    pb = MM.param_bytes_per_stage(n, cfg)
+    spread = cfg.param_count() / n.p / n.t * MM.BYTES_PER_PARAM
+    assert pb < spread
+    assert pb == pytest.approx(
+        (cfg.param_count() - MM.vocab_param_count(n, cfg))
+        / n.p / n.t * MM.BYTES_PER_PARAM)
+    # fallback: 12lh^2 blocks only — no 2vh term hiding in there
+    n2 = Notation(a=4, b=1, h=256, l=16, s=128, v=262_144, B=16, p=4, t=1)
+    assert MM.param_bytes_per_stage(n2, None) == pytest.approx(
+        12.0 * n2.l * n2.h**2 / (n2.p * n2.t) * MM.BYTES_PER_PARAM)
+    assert MM.vocab_param_count(n2, None) == pytest.approx(2.0 * n2.v * n2.h)
+
+
+def test_tied_table_charged_once_with_replica_head():
+    """gemma2-9b ties its table: stage 0 owns the optimizer state, the
+    last stage pays only the bf16 param+grad working copy."""
+    cfg, n = _paper_shape("gemma2-9b")
+    assert cfg.tie_embeddings
+    vb = MM.vocab_bytes_per_stage(n, cfg, 1)
+    table = cfg.vocab_size * cfg.d_model / n.t
+    assert vb[0] == pytest.approx(table * MM.BYTES_PER_PARAM)
+    assert vb[-1] == pytest.approx(
+        table * MM.TIED_REPLICA_BYTES_PER_PARAM + MM.logits_bytes(n))
+    # p == 1: one tensor, charged once, logits on top
+    n1 = n.replace(p=1)
+    vb1 = MM.vocab_bytes_per_stage(n1, cfg, 1)
+    assert vb1 == [pytest.approx(table * MM.BYTES_PER_PARAM
+                                 + MM.logits_bytes(n1))]
+
+
+def test_vocab_collective_and_traffic_pricing():
+    cfg, n = _paper_shape("qwen3-14b")
+    assert MM.vocab_collective_bytes(n, 1) == 0.0
+    vcb = MM.vocab_collective_bytes(n, 4)
+    assert vcb == pytest.approx(2.0 * 3 / 4 * 2.0 * n.s * n.b * n.h / n.t)
+    spec = P.ScheduleSpec("1f1b", n.p, n.num_micro)
+    vspec = dataclasses.replace(spec, vocab_parallel=4)
+    base = MM.traffic_bytes(n, "recompute", spec)
+    assert MM.traffic_bytes(n, "recompute", vspec) \
+        == pytest.approx(base + 4.0 * spec.m * vcb)
+
+
+# ---------------------------------------------------------------------------
+# ScheduleSpec: validation, label, round-trip, compile re-bind
+# ---------------------------------------------------------------------------
+def test_spec_vocab_parallel_validation():
+    with pytest.raises(ValueError, match="vocab_parallel"):
+        P.ScheduleSpec("1f1b", 4, 16, vocab_parallel=0)
+    with pytest.raises(ValueError, match="vocab_parallel"):
+        P.ScheduleSpec("1f1b", 4, 16, vocab_parallel=8)
+    # p == 1: nothing to scatter over — normalized, not rejected
+    assert P.ScheduleSpec("gpipe", 1, 4, vocab_parallel=1).vocab_parallel == 1
+
+
+def test_spec_vocab_parallel_roundtrip_and_label():
+    spec = P.ScheduleSpec("bpipe", 4, 16, vocab_parallel=4)
+    assert "vp=4" in spec.label()
+    assert "vp=" not in P.ScheduleSpec("bpipe", 4, 16).label()
+    d = spec.to_dict()
+    assert d["vocab_parallel"] == 4
+    assert P.ScheduleSpec.from_dict(d) == spec
+    bad = dict(d, vocap_parallel=2)
+    with pytest.raises((TypeError, ValueError, KeyError)):
+        P.ScheduleSpec.from_dict(bad)
+
+
+def test_compile_rebinds_vocab_parallel_to_base_streams():
+    """vocab_parallel is a pricing dimension: the compiled streams are
+    the vp=1 base's, byte-identical dispatch."""
+    spec = P.ScheduleSpec("1f1b", 4, 16, vocab_parallel=2)
+    sch = P.compile_plan(spec)
+    base = P.compile_plan(P.ScheduleSpec("1f1b", 4, 16))
+    assert sch.streams is base.streams
+    assert sch.spec.vocab_parallel == 2
+
+
+# ---------------------------------------------------------------------------
+# Simulator: boundary-stage collective pricing
+# ---------------------------------------------------------------------------
+def test_simulator_prices_vocab_collective_on_boundaries():
+    spec = P.ScheduleSpec("1f1b", 4, 16)
+    plain = SIM.simulate(SIM.SimConfig(spec=spec, Tf=1.0, Tb=2.0))
+    assert plain.vocab_time == 0.0
+    priced = SIM.simulate(SIM.SimConfig(spec=spec, Tf=1.0, Tb=2.0,
+                                        t_vocab=0.25))
+    # every boundary-stage F and B pays: 2 stages * m * (F + B)
+    assert priced.vocab_time == pytest.approx(2 * 16 * 2 * 0.25)
+    assert priced.makespan > plain.makespan
+    # middle stages' busy time is untouched; boundaries absorb the charge
+    assert priced.busy[1] == pytest.approx(plain.busy[1])
+    assert priced.busy[0] == pytest.approx(plain.busy[0] + 16 * 2 * 0.25)
+
+
+def test_sim_config_for_injects_t_vocab():
+    """The CLI's re-simulation path prices the collective exactly as
+    rank did: t_vocab = collective bytes / link bw, 0 when unscattered."""
+    n = Notation(a=4, b=1, h=256, l=16, s=128, v=262_144, B=16, p=4, t=1)
+    cost = AnalyticCostModel()
+    hbm = 1.5 * MM.max_stage_bytes(n, "recompute", "1f1b")
+    ranked = R.rank(n, list(SP.enumerate_candidates(
+        n, SearchSpace(vs=(2,), vocab_parallels=(1, 2)))),
+        cost, hbm, workspace=0.0)
+    by_vp = {}
+    for rp in ranked:
+        if rp.makespan > 0:
+            by_vp.setdefault(rp.cand.vocab_parallel, rp)
+    assert {1, 2} <= set(by_vp)
+    assert R.sim_config_for(n, by_vp[1], cost).t_vocab == 0.0
+    sc = R.sim_config_for(n, by_vp[2], cost)
+    nb = n.replace(b=by_vp[2].cand.b)
+    from repro.core.notation import NVLINK_BW
+    assert sc.t_vocab == pytest.approx(
+        MM.vocab_collective_bytes(nb, 2) / NVLINK_BW)
+
+
+# ---------------------------------------------------------------------------
+# Planner: the dimension is searched, bounded, and changes a verdict
+# ---------------------------------------------------------------------------
+def test_search_space_default_stays_unscattered():
+    n = Notation(a=4, b=1, h=256, l=16, s=128, v=512, B=16, p=4, t=1)
+    cands = list(SP.enumerate_candidates(n, SearchSpace()))
+    assert all(c.vocab_parallel == 1 for c in cands)
+    opened = list(SP.enumerate_candidates(
+        n, SearchSpace(vocab_parallels=(1, 2, 4, 8))))
+    vps = {c.vocab_parallel for c in opened}
+    assert vps == {1, 2, 4}  # 8 > p filtered out
+    assert len(opened) == 3 * len(cands)
+
+
+def test_vocab_parallel_turns_qwen3_feasible():
+    """The acceptance bar: at 14 GiB the unscattered planner finds
+    NOTHING for qwen3-14b (151k vocab), the vp ladder finds a plan."""
+    cfg, n = _paper_shape("qwen3-14b")
+    cost = cost_model_for(cfg)
+    hbm = 14 * 2**30
+    base = plan_config(n, cfg, hbm, cost=cost,
+                       search=SearchSpace(attentions=("recompute",)))
+    assert recommend(base, "recompute") is None
+    opened = plan_config(
+        n, cfg, hbm, cost=cost,
+        search=SearchSpace(attentions=("recompute",),
+                           vocab_parallels=(1, 2, 4, 8)))
+    rp = recommend(opened, "recompute")
+    assert rp is not None and rp.cand.vocab_parallel > 1
+    assert "vp=" in rp.cand.label()
+
+
+def test_llama_control_verdict_unchanged():
+    """32k-vocab llama-65b at the paper's A100-80G: opening the vp
+    ladder must NOT move the recommendation (Table 3 protection)."""
+    cfg, n = _paper_shape("llama-65b")
+    cost = cost_model_for(cfg)
+    base = plan_config(n, cfg, A100_HBM_BYTES, cost=cost,
+                       search=SearchSpace(attentions=("recompute",)))
+    opened = plan_config(
+        n, cfg, A100_HBM_BYTES, cost=cost,
+        search=SearchSpace(attentions=("recompute",),
+                           vocab_parallels=(1, 2, 4, 8)))
+    b, o = recommend(base, "recompute"), recommend(opened, "recompute")
+    assert b is not None and o is not None
+    assert o.cand == b.cand
+    assert o.cand.vocab_parallel == 1
+
+
+def test_pruned_matches_exhaustive_with_vocab_dimension():
+    """pruned == exhaustive still holds on a space that includes vp
+    (the B&B bound's ``2 m t_vocab`` term is admissible)."""
+    n = Notation(a=4, b=1, h=256, l=16, s=128, v=262_144, B=16, p=4, t=1)
+    cost = AnalyticCostModel()
+    hbm = 1.5 * MM.max_stage_bytes(n, "recompute", "1f1b")
+    cands = list(SP.enumerate_candidates(
+        n, SearchSpace(vs=(2,), vocab_parallels=(1, 2, 4))))
+    fast = R.rank(n, cands, cost, hbm, workspace=0.0)
+    full = R.rank(n, cands, cost, hbm, workspace=0.0, exhaustive=True)
+    by_cand = {rp.cand: rp for rp in full}
+    for arm in R.arms_of(full) + [None]:
+        bf, bx = recommend(fast, arm), recommend(full, arm)
+        assert (bf.cand if bf else None) == (bx.cand if bx else None)
+    for rp in fast:
+        if rp.makespan > 0:
+            bound = R.mfu_upper_bound(n, rp.cand, cost)
+            assert rp.mfu <= bound + 1e-12, (rp.cand, rp.mfu, bound)
+            twin = by_cand[rp.cand]
+            assert (rp.mfu, rp.makespan) == (twin.mfu, twin.makespan)
+
+
+# ---------------------------------------------------------------------------
+# Sharding: the stage-scatter layout
+# ---------------------------------------------------------------------------
+def test_vocab_shard_range_tiles_exactly():
+    vocab, p = 151_936, 8
+    for side, owners in (("embed", range(4)), ("head", range(4, 8))):
+        spans = [rules.vocab_shard_range(i, p, 4, vocab, side)
+                 for i in range(p)]
+        held = [spans[i] for i in owners]
+        # participating stages tile [0, vocab) in order, no gaps
+        assert held[0][0] == 0 and held[-1][1] == vocab
+        for (_, hi), (lo, _) in zip(held, held[1:]):
+            assert hi == lo
+        for i in range(p):
+            if i not in owners:
+                assert spans[i] == (0, 0)
+    # vp=1: the owner stage holds everything
+    assert rules.vocab_shard_range(0, p, 1, vocab, "embed") == (0, vocab)
+    assert rules.vocab_shard_range(p - 1, p, 1, vocab, "head") == (0, vocab)
+    assert rules.vocab_shard_range(0, p, 1, vocab, "head") == (0, 0)
+    with pytest.raises(ValueError):
+        rules.vocab_shard_range(0, p, 1, vocab, "logits")
+
+
+def test_vocab_param_spec_moves_model_axis():
+    from jax.sharding import PartitionSpec
+    assert rules.vocab_param_spec("table") == PartitionSpec(rules.M, None)
+    assert rules.vocab_param_spec("table", 4) == PartitionSpec(None, rules.M)
+    assert rules.vocab_param_spec("unembed", 4) \
+        == PartitionSpec(rules.M, None)
+    with pytest.raises(KeyError):
+        rules.vocab_param_spec("wq", 4)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: reduced() keeps a decoupled head_dim's ratio
+# ---------------------------------------------------------------------------
+def test_reduced_preserves_decoupled_head_dim_ratio():
+    cfg = get_config("gemma2-9b")  # head_dim 256 != 3584/16 = 224
+    r = cfg.reduced()
+    base = r.d_model // r.num_heads
+    want = 2 * round(base * cfg.head_dim * cfg.num_heads
+                     / cfg.d_model / 2)
+    assert r.head_dim == want != base
+    assert r.head_dim % 2 == 0  # RoPE splits the head in half
+    # coupled families stay coupled
+    q = get_config("qwen3-14b").reduced()
+    assert q.head_dim == q.d_model // q.num_heads
